@@ -1,0 +1,57 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import opt  # noqa: E402
+from repro.core import zo  # noqa: E402
+from repro.data import synthetic  # noqa: E402
+from repro.models import lm  # noqa: E402
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    """Median wall time (s) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bench_model(layers=4, d_model=512, vocab=2048, seq=32):
+    """A CPU-timeable model whose params/token ratio mirrors the paper's
+    short-sequence fine-tuning regime (perturb work ~ forward work)."""
+    return opt.opt_tiny(layers=layers, d_model=d_model, vocab=vocab), seq
+
+
+def make_batch(cfg, batch, seq, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)
+    return {"tokens": toks, "labels": toks,
+            "loss_mask": jnp.ones((batch, seq), jnp.float32)}
+
+
+def make_zo_parts(cfg, n_drop, backend="scan", lr=1e-4, eps=1e-3):
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    spec = zo.build_spec(params, lm.zo_group_fn)
+    zcfg = zo.ZOConfig(eps=eps, lr=lr, n_drop=n_drop, backend=backend)
+    step = jax.jit(zo.make_zo_step(lambda p, b: lm.lm_loss(cfg, p, b),
+                                   spec, zcfg))
+    return params, spec, zcfg, step
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows

@@ -1,0 +1,33 @@
+"""§Roofline: tabulate the dry-run artifacts (artifacts/dryrun/*.json).
+
+Run the dry-run first:  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def run():
+    rows = []
+    files = sorted(glob.glob("artifacts/dryrun/*.json"))
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        t = r["roofline"]
+        dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: t[k])
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        frac = t["compute_s"] / bound if bound else 0.0
+        name = f"{r['arch']}|{r['shape']}|{r['mesh']}|{r['variant']}"
+        rows.append((name, bound * 1e6,
+                     f"dom={dom[:-2]} roofline_frac={frac:.3f} "
+                     f"useful={r['useful_flop_ratio'] and round(r['useful_flop_ratio'], 3)}"))
+        print(f"{name},{bound * 1e6:.1f},{rows[-1][2]}")
+    if not files:
+        print("roofline,0,no dry-run artifacts found (run repro.launch.dryrun)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  See DESIGN.md §5 for the
+paper-artifact mapping.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+
+def main() -> None:
+    from benchmarks import (accuracy, peft, roofline, sparsity_sweep,
+                            speedup, stage_breakdown, token_length,
+                            zo_momentum)
+    print("name,us_per_call,derived")
+    for mod in (stage_breakdown, speedup, sparsity_sweep, token_length,
+                accuracy, peft, zo_momentum, roofline):
+        print(f"# --- {mod.__name__} ---")
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Quickstart: fine-tune a small OPT-family model with LeZO vs MeZO.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+
+Reproduces the paper's core claim at CPU scale: LeZO (75% of layers
+dropped per step) converges at least as fast as MeZO per *step* while
+doing ~4x less perturbation/update work per step.
+"""
+import sys, pathlib
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+from repro.configs import opt
+from repro.core import zo
+from repro.data import synthetic
+from repro.train.trainer import Trainer, TrainConfig
+
+mcfg = opt.opt_tiny(layers=4, d_model=128, vocab=512)
+task = synthetic.TaskConfig(vocab=512, seq_len=64, n_classes=2,
+                            signal_rate=0.35)
+STEPS = 400
+
+for name, n_drop in [("MeZO", 0), ("LeZO (75% sparse)", 3)]:
+    tr = Trainer(mcfg, task,
+                 TrainConfig(steps=STEPS, batch_size=16, eval_every=100,
+                             log_every=100),
+                 zo_cfg=zo.ZOConfig(eps=1e-3, lr=3e-4, n_drop=n_drop,
+                                    backend="scan"))
+    h = tr.train()
+    print(f"{name:20s} loss: " + " -> ".join(f"{x:.3f}" for x in h["loss"])
+          + f"   val_acc: {h['val_acc']}")

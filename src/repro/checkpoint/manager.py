@@ -1,0 +1,139 @@
+"""Fault-tolerant checkpointing for ZO training.
+
+ZO optimizer state is (params, step, base_seed) — no moments — so a
+checkpoint is the parameter tree plus a tiny manifest.  Design points for
+1000+ node runs (see DESIGN.md §7):
+
+  * atomic: write to ``<dir>/tmp.<step>`` then ``os.rename`` — a crash
+    mid-write never corrupts the latest checkpoint;
+  * sharded: each host saves only the leaves (or leaf shards) it owns via
+    ``shard_filter``; the manifest records the tree structure so restore
+    validates shapes before touching device memory;
+  * async: ``save(..., blocking=False)`` hands the host-side write to a
+    daemon thread — the train loop continues (the arrays are already
+    fetched, so there is no race with donation);
+  * keep-k GC, newest-first ``latest()`` resolution, and deterministic
+    *replay*: because every LeZO update derives from (base_seed, step), a
+    restore reproduces the exact update stream that would have followed.
+  * elastic: ``remesh`` re-places a restored tree onto any new mesh —
+    legal at any step boundary because ZO state is mesh-free.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(params) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        ps = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[ps] = np.asarray(leaf)
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, params, base_seed: int, extra: Optional[dict] = None,
+             blocking: bool = True,
+             shard_filter: Optional[Callable[[str], bool]] = None):
+        flat = _flatten(params)
+        if shard_filter is not None:
+            flat = {k: v for k, v in flat.items() if shard_filter(k)}
+        manifest = {
+            "step": int(step),
+            "base_seed": int(base_seed),
+            "extra": extra or {},
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in flat.items()},
+        }
+
+        def _write():
+            tmp = os.path.join(self.dir, f"tmp.{step}")
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f, indent=1)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        self.wait()
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        ckpts = self.all_steps()
+        for s in ckpts[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None):
+        """Restore into the structure of ``template`` (validates shapes).
+
+        Returns (params, step, base_seed, extra)."""
+        step = step if step is not None else self.latest()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in flat:
+            ps = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                          for p in path)
+            if ps not in data:
+                raise KeyError(f"checkpoint {d} missing leaf {ps}")
+            arr = data[ps]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"shape mismatch for {ps}: ckpt {arr.shape} vs {leaf.shape}")
+            leaves.append(arr.astype(leaf.dtype))
+        params = jax.tree_util.tree_unflatten(treedef, leaves)
+        return (params, manifest["step"], manifest["base_seed"],
+                manifest["extra"])
+
+
+def remesh(params, mesh, shardings):
+    """Re-place a (restored) tree onto a new mesh — elastic rescale.
+
+    ``shardings`` is a pytree of NamedSharding matching ``params``; works
+    for grown/shrunk meshes since host arrays carry no placement."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), params, shardings)

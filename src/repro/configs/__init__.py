@@ -1,0 +1,29 @@
+"""Architecture registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    "xlstm-350m": "xlstm_350m",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "qwen3-14b": "qwen3_14b",
+    "musicgen-large": "musicgen_large",
+    "internvl2-2b": "internvl2_2b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "opt-13b": "opt",
+}
+
+
+def get(arch: str, variant: str = "full"):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return getattr(mod, variant)()
+
+
+def list_archs():
+    return sorted(ARCHS)

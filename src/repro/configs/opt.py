@@ -1,0 +1,39 @@
+"""OPT family (the paper's models): relu, LayerNorm, learned positions,
+MHA, tied embeddings.  [arXiv:2205.01068]
+
+The paper fine-tunes OPT-1.3b / 13b / 30b with MeZO/LeZO; we reproduce the
+configs for cost analysis and provide reduced variants for CPU-scale
+convergence experiments (benchmarks/accuracy.py).
+"""
+from repro.models.config import ModelConfig, dense_lm
+
+_COMMON = dict(act="relu", norm="ln", pos_emb="learned", tie_embeddings=True,
+               max_seq=2048)
+
+
+def opt_1_3b() -> ModelConfig:
+    return dense_lm("opt-1.3b", 24, 2048, 32, 32, 8192, 50272, **_COMMON)
+
+
+def opt_13b() -> ModelConfig:
+    return dense_lm("opt-13b", 40, 5120, 40, 40, 20480, 50272, **_COMMON)
+
+
+def opt_30b() -> ModelConfig:
+    return dense_lm("opt-30b", 48, 7168, 56, 56, 28672, 50272, **_COMMON)
+
+
+def full() -> ModelConfig:  # registry default: the paper's main model
+    return opt_13b()
+
+
+def smoke() -> ModelConfig:
+    return dense_lm("opt-smoke", 2, 64, 4, 4, 128, 512, dtype="float32",
+                    **{**_COMMON, "max_seq": 128})
+
+
+def opt_tiny(layers=4, d_model=128, vocab=512) -> ModelConfig:
+    """CPU-trainable OPT-shaped model for convergence benchmarks."""
+    return dense_lm(f"opt-tiny-{layers}L{d_model}", layers, d_model, 4, 4,
+                    4 * d_model, vocab, dtype="float32",
+                    **{**_COMMON, "max_seq": 256})

@@ -1,0 +1,37 @@
+"""Assigned input-shape grid (LM-family transformers).
+
+``train_*`` shapes lower ``train_step`` (a full LeZO/MeZO optimization
+step); ``decode_*`` / ``long_*`` lower ``serve_step`` (one new token
+against a KV/state cache of ``seq_len``); ``prefill_*`` lowers the cache
+build over the full prompt.
+
+``long_500k`` requires sub-quadratic sequence handling — it only runs for
+configs with ``subquadratic=True`` (xlstm, jamba); pure full-attention
+archs skip it (recorded in DESIGN.md §4 and EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+def shapes_for(cfg) -> list:
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.subquadratic:
+        out.append(SHAPES["long_500k"])
+    return out

@@ -1,0 +1,86 @@
+"""First-order baselines (the paper's "FT" rows): SGD / momentum / AdamW.
+
+Self-contained pytree optimizers (no optax in the container).  Used by the
+trainer for the accuracy-vs-memory comparison in benchmarks/accuracy.py:
+FO needs activations + (for AdamW) 2x parameter moments — the "12x memory"
+row of Table 1 — while ZO state is just (params, seed, step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class FOState(NamedTuple):
+    mu: Any          # first moment (or momentum buffer); None-like zeros for sgd
+    nu: Any          # second moment (adamw only)
+    count: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class FOConfig:
+    optimizer: str = "adamw"     # sgd | momentum | adamw
+    lr: float = 1e-5
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: Optional[float] = 1.0
+
+
+def init_state(params, cfg: FOConfig) -> FOState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    if cfg.optimizer == "sgd":
+        z = jax.tree.map(lambda x: jnp.zeros((), x.dtype), params)  # token state
+        return FOState(z, z, jnp.zeros((), jnp.int32))
+    if cfg.optimizer == "momentum":
+        return FOState(zeros, jax.tree.map(lambda x: jnp.zeros((), x.dtype), params),
+                       jnp.zeros((), jnp.int32))
+    return FOState(zeros, jax.tree.map(jnp.zeros_like, params), jnp.zeros((), jnp.int32))
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def make_fo_step(loss_fn: Callable, cfg: FOConfig,
+                 lr_schedule: Optional[Callable] = None):
+    sched = lr_schedule or (lambda t: cfg.lr)
+
+    def step(params, state: FOState, batch, step_idx):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if cfg.grad_clip is not None:
+            gn = _global_norm(grads)
+            scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        lr = sched(step_idx)
+        count = state.count + 1
+        if cfg.optimizer == "sgd":
+            new_params = jax.tree.map(
+                lambda p, g: p - lr * (g + cfg.weight_decay * p), params, grads)
+            new_state = state._replace(count=count)
+        elif cfg.optimizer == "momentum":
+            mu = jax.tree.map(lambda m, g: cfg.beta1 * m + g, state.mu, grads)
+            new_params = jax.tree.map(
+                lambda p, m: p - lr * (m + cfg.weight_decay * p), params, mu)
+            new_state = state._replace(mu=mu, count=count)
+        else:  # adamw
+            t = count.astype(jnp.float32)
+            mu = jax.tree.map(lambda m, g: cfg.beta1 * m + (1 - cfg.beta1) * g,
+                              state.mu, grads)
+            nu = jax.tree.map(lambda v, g: cfg.beta2 * v + (1 - cfg.beta2) * g * g,
+                              state.nu, grads)
+            bc1 = 1.0 - cfg.beta1 ** t
+            bc2 = 1.0 - cfg.beta2 ** t
+            new_params = jax.tree.map(
+                lambda p, m, v: p - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+                                          + cfg.weight_decay * p),
+                params, mu, nu)
+            new_state = FOState(mu, nu, count)
+        return new_params, new_state, {"loss": loss, "lr": lr}
+
+    return step

@@ -1,0 +1,76 @@
+"""Layer-selection policies for LeZO.
+
+Each policy returns a boolean ``active`` mask of shape (num_layers,):
+True means the layer is perturbed+updated this step, False means dropped
+(the paper's "subset a").  ``n_drop = 0`` recovers MeZO exactly.
+
+Policies are pure functions of (seed, step) so every data-parallel replica
+— and a restarted job — derives the identical subset with no
+communication (the same property the perturbation RNG has).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import rng
+
+_SALT = 0x5E1EC7  # "select"
+
+POLICIES = ("uniform", "round_robin", "weighted")
+
+
+def uniform_active(seed, num_layers: int, n_drop: int):
+    """Paper policy: drop ``n_drop`` layers uniformly without replacement.
+
+    Implemented as a random ranking: hash each layer id, drop the
+    ``n_drop`` smallest.  Hashes collide with probability ~N^2/2^32 —
+    negligible, and a collision only slightly biases one step's subset.
+    """
+    if not 0 <= n_drop < num_layers:
+        raise ValueError(f"n_drop must be in [0, {num_layers}), got {n_drop}")
+    if n_drop == 0:
+        return jnp.ones((num_layers,), jnp.bool_)
+    ids = jnp.arange(num_layers, dtype=jnp.uint32)
+    bits = rng.mix32(ids * jnp.uint32(0x9E3779B9) + rng.fold(seed, jnp.uint32(_SALT)))
+    order = jnp.argsort(bits)  # ascending
+    active = jnp.ones((num_layers,), jnp.bool_).at[order[:n_drop]].set(False)
+    return active
+
+
+def round_robin_active(step, num_layers: int, n_drop: int, stride: int = 1):
+    """Deterministic rotation: a contiguous window of active layers walks
+    the stack.  Zero RNG; useful as an ablation (and for pipeline-friendly
+    schedules where the active window aligns with pipeline stages)."""
+    k = num_layers - n_drop
+    start = (jnp.asarray(step, jnp.int32) * stride) % num_layers
+    pos = (jnp.arange(num_layers, dtype=jnp.int32) - start) % num_layers
+    return pos < k
+
+
+def weighted_active(seed, weights, n_drop: int):
+    """Beyond-paper: importance-weighted selection via Gumbel top-k.
+
+    ``weights`` (num_layers,) >= 0 — e.g. running |projected_grad|
+    attribution per layer.  Layers with larger weight are kept more often,
+    LISA-style, while remaining fully stochastic.
+    """
+    num_layers = weights.shape[0]
+    k = num_layers - n_drop
+    ids = jnp.arange(num_layers, dtype=jnp.uint32)
+    bits = rng.mix32(ids * jnp.uint32(0x9E3779B9) + rng.fold(seed, jnp.uint32(_SALT + 1)))
+    u = (bits >> jnp.uint32(8)).astype(jnp.float32) / jnp.float32(1 << 24)
+    gumbel = -jnp.log(-jnp.log(jnp.clip(u, 1e-7, 1.0 - 1e-7)))
+    score = jnp.log(jnp.clip(weights, 1e-9, None)) + gumbel
+    thresh = jnp.sort(score)[num_layers - k]
+    return score >= thresh
+
+
+def make_policy(name: str, num_layers: int, n_drop: int):
+    """Returns fn(seed, step, weights) -> active mask."""
+    if name == "uniform":
+        return lambda seed, step, weights=None: uniform_active(seed, num_layers, n_drop)
+    if name == "round_robin":
+        return lambda seed, step, weights=None: round_robin_active(step, num_layers, n_drop)
+    if name == "weighted":
+        return lambda seed, step, weights=None: weighted_active(seed, weights, n_drop)
+    raise ValueError(f"unknown policy {name!r}; pick from {POLICIES}")

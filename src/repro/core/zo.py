@@ -1,0 +1,205 @@
+"""LeZO / MeZO optimizer core: layer-sparse SPSA + ZO-SGD over pytrees.
+
+The optimizer sees parameters through a :class:`ZOSpec`, which labels each
+leaf as either *always-perturbed* (embeddings, head, final norm, PEFT
+vectors) or *stacked over a layer group* (axis 0 = layers of one
+homogeneous block group — see models.lm).
+
+A single ZO step (Algorithm 1 of the paper)::
+
+    active  = select(seed_t)                       # LeZO subset
+    theta  += eps * z        (on active layers)    # perturb +
+    l_plus  = loss(theta)
+    theta  -= 2*eps * z                            # perturb -
+    l_minus = loss(theta)
+    g       = (l_plus - l_minus) / (2*eps)         # projected grad (scalar!)
+    theta  += (eps - lr*g) * z                     # fused restore+update
+
+Every pass regenerates z from (base_seed, step); nothing is stored, and
+under data parallelism the only cross-replica values are the two scalar
+losses.  ``fused_update=False`` gives the paper-faithful separate
+restore + update passes.
+
+Layer selection
+---------------
+``policy="uniform"`` is the paper's policy: drop n_drop of the N global
+layers uniformly.  ``policy="stratified"`` (default here) fixes a static
+per-group quota (largest-remainder apportionment of n_drop over groups)
+and samples uniformly *within* each group — statistically equivalent for
+single-group models (i.e. all of the paper's OPT experiments) and
+required by the ``gather`` backend, whose compact active buffer needs a
+static size per stacked leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng, selection
+from repro.kernels import ops as kops
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZOSpec:
+    """Maps parameter leaves to layer groups (see build_spec)."""
+    paths: Tuple[str, ...]
+    groups: Tuple[Optional[str], ...]
+    slices: Dict[str, Tuple[int, int]]   # group -> (start, length) globally
+    num_layers: int
+
+    def split_mask(self, active):
+        return {g: jax.lax.dynamic_slice(active, (s,), (l,))
+                for g, (s, l) in self.slices.items()}
+
+    def quotas(self, n_drop: int) -> Dict[str, int]:
+        """Largest-remainder apportionment of n_drop over groups."""
+        if not 0 <= n_drop < self.num_layers:
+            raise ValueError(f"n_drop must be in [0, {self.num_layers})")
+        exact = {g: n_drop * L / self.num_layers
+                 for g, (_, L) in self.slices.items()}
+        base = {g: min(int(e), self.slices[g][1]) for g, e in exact.items()}
+        order = sorted(exact, key=lambda g: exact[g] - base[g], reverse=True)
+        i = 0
+        while sum(base.values()) < n_drop:
+            g = order[i % len(order)]
+            if base[g] < self.slices[g][1]:
+                base[g] += 1
+            i += 1
+        return base
+
+
+def build_spec(params, group_fn: Callable[[str], Optional[str]]) -> ZOSpec:
+    """``group_fn(path_str)`` returns the layer-group name for a leaf
+    stacked over layers on axis 0, or None for always-perturbed leaves."""
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    paths, groups, sizes = [], [], {}
+    for path, leaf in leaves:
+        ps = _path_str(path)
+        g = group_fn(ps)
+        paths.append(ps)
+        groups.append(g)
+        if g is not None:
+            L = leaf.shape[0]
+            if sizes.setdefault(g, L) != L:
+                raise ValueError(
+                    f"group {g!r}: inconsistent layer counts {sizes[g]} vs {L} at {ps}")
+    slices, start = {}, 0
+    for g in sorted(sizes):
+        slices[g] = (start, sizes[g])
+        start += sizes[g]
+    return ZOSpec(tuple(paths), tuple(groups), slices, start)
+
+
+# ----------------------------------------------------------- selection
+def stratified_select(spec: ZOSpec, seed, n_drop: int):
+    """Per-group masks + static-size active index vectors.
+
+    Returns (masks: {g: (L_g,) bool}, idxs: {g: (L_g - quota_g,) int32},
+    n_active).
+    """
+    quotas = spec.quotas(n_drop)
+    masks, idxs = {}, {}
+    n_active = 0
+    for g, (start, L) in spec.slices.items():
+        q = quotas[g]
+        gseed = rng.fold(seed, jnp.uint32(rng.leaf_uid("sel/" + g)))
+        ids = jnp.arange(L, dtype=jnp.uint32)
+        bits = rng.mix32(ids * jnp.uint32(0x9E3779B9) + gseed)
+        order = jnp.argsort(bits)
+        act = jnp.sort(order[q:]).astype(jnp.int32)      # active, ascending
+        masks[g] = jnp.zeros((L,), jnp.bool_).at[act].set(True)
+        idxs[g] = act
+        n_active += L - q
+    return masks, idxs, n_active
+
+
+def uniform_select(spec: ZOSpec, seed, n_drop: int):
+    """Paper policy: global uniform drop (dynamic per-group counts)."""
+    active = selection.uniform_active(seed, spec.num_layers, n_drop)
+    return spec.split_mask(active), None, spec.num_layers - n_drop
+
+
+# ----------------------------------------------------------------- axpy
+def tree_axpy(params, spec: ZOSpec, seed, scale, masks, idxs=None, *,
+              decay=1.0, backend="dense", interpret=True):
+    """theta <- decay*theta + scale*z on active layers, identity elsewhere."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    assert len(leaves) == len(spec.paths), "params tree changed since build_spec"
+    out = []
+    for leaf, path, group in zip(leaves, spec.paths, spec.groups):
+        mask = None if group is None else masks[group]
+        aidx = None if (group is None or idxs is None) else idxs[group]
+        out.append(kops.zo_axpy(
+            leaf, path=path, seed=seed, scale=scale, decay=decay,
+            mask=mask, active_idx=aidx, backend=backend, interpret=interpret))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZOConfig:
+    eps: float = 1e-3
+    lr: float = 1e-6
+    n_drop: int = 0               # 0 => MeZO; >0 => LeZO
+    policy: str = "stratified"    # stratified | uniform
+    backend: str = "dense"        # dense | scan | gather | pallas
+    fused_update: bool = True     # beyond-paper single restore+update pass
+    weight_decay: float = 0.0
+    interpret: bool = True        # pallas interpret mode (CPU container)
+
+
+def make_zo_step(loss_fn: Callable, spec: ZOSpec, cfg: ZOConfig,
+                 lr_schedule: Optional[Callable] = None):
+    """Build the jit-able ZO step: step(params, batch, step_idx, base_seed)
+    -> (params, metrics).  ``loss_fn(params, batch) -> scalar`` must
+    average over the (possibly sharded) batch.  Donate params at jit time."""
+    if cfg.backend == "gather" and cfg.policy != "stratified":
+        raise ValueError("gather backend requires the stratified policy")
+    sched = lr_schedule or (lambda t: cfg.lr)
+
+    def step(params, batch, step_idx, base_seed):
+        seed = rng.fold(jnp.asarray(base_seed, jnp.uint32),
+                        jnp.asarray(step_idx, jnp.uint32))
+        if cfg.policy == "stratified":
+            masks, idxs, n_active = stratified_select(spec, seed, cfg.n_drop)
+        else:
+            masks, idxs, n_active = uniform_select(spec, seed, cfg.n_drop)
+        ax = lambda p, s, d=1.0: tree_axpy(
+            p, spec, seed, s, masks, idxs, decay=d,
+            backend=cfg.backend, interpret=cfg.interpret)
+
+        p = ax(params, cfg.eps)
+        l_plus = loss_fn(p, batch)
+        p = ax(p, -2.0 * cfg.eps)
+        l_minus = loss_fn(p, batch)
+        g = (l_plus - l_minus) / (2.0 * cfg.eps)
+        lr = sched(step_idx)
+        decay = 1.0 - lr * cfg.weight_decay
+        if cfg.fused_update:
+            p = ax(p, cfg.eps - lr * g, decay)
+        else:  # paper-faithful two passes
+            p = ax(p, cfg.eps)               # restore
+            p = ax(p, -lr * g, decay)        # ZO-SGD update
+        metrics = {
+            "loss": 0.5 * (l_plus + l_minus),
+            "projected_grad": g,
+            "lr": lr,
+            "active_layers": jnp.asarray(n_active, jnp.int32),
+        }
+        return p, metrics
+
+    return step

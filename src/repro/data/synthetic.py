@@ -1,0 +1,105 @@
+"""Synthetic fine-tuning tasks (SuperGLUE stand-ins, see DESIGN.md §8).
+
+Offline container => no SST-2/BoolQ/SQuAD.  These tasks exercise the same
+code paths and difficulty *structure*:
+
+  * classification  — SST-2/BoolQ-like: a prompt whose token statistics
+    carry a class signal, followed by a query position; the model must
+    emit the class verbalizer token.  Loss masked to the answer position
+    (the MeZO prompt-based fine-tuning setup).
+  * multiple_choice — Copa-like: the signal selects among k verbalizers.
+  * generation      — SQuAD-like copy task: the answer is a span that
+    occurred earlier in the prompt; loss over the answer tokens.
+
+Difficulty is controlled by signal density; all generators are
+numpy-seeded and deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskConfig:
+    name: str = "classification"
+    kind: str = "classification"   # classification | multiple_choice | generation
+    vocab: int = 512
+    seq_len: int = 64
+    n_classes: int = 2
+    signal_rate: float = 0.25      # fraction of context positions carrying signal
+    answer_len: int = 8            # generation only
+    seed: int = 0
+
+    @property
+    def verbalizers(self) -> np.ndarray:
+        # reserve the top token ids as class verbalizers / query marker
+        return np.arange(self.vocab - 1 - self.n_classes, self.vocab - 1)
+
+    @property
+    def query_token(self) -> int:
+        return self.vocab - 1
+
+
+def make_dataset(task: TaskConfig, n: int) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(task.seed)
+    V, S = task.vocab, task.seq_len
+    base_vocab = V - 1 - task.n_classes          # ids usable as filler
+    tokens = rng.integers(0, base_vocab // 2, size=(n, S))
+    labels_cls = rng.integers(0, task.n_classes, size=(n,))
+    loss_mask = np.zeros((n, S - 1), np.float32)
+
+    if task.kind in ("classification", "multiple_choice"):
+        # class-conditional signal tokens scattered through the context
+        for c in range(task.n_classes):
+            rows = labels_cls == c
+            sig = rng.random((rows.sum(), S)) < task.signal_rate
+            sig_tokens = base_vocab // 2 + c * (base_vocab // (2 * task.n_classes)) \
+                + rng.integers(0, base_vocab // (2 * task.n_classes),
+                               size=(rows.sum(), S))
+            tokens[rows] = np.where(sig, sig_tokens, tokens[rows])
+        tokens[:, -2] = task.query_token
+        tokens[:, -1] = task.verbalizers[labels_cls]
+        # labels[t] = tokens[t+1]: the verbalizer (position S-1) is
+        # predicted at label index S-2 — the last one.
+        loss_mask[:, -1] = 1.0
+    elif task.kind == "generation":
+        A = task.answer_len
+        span_start = rng.integers(4, S - 3 * A, size=(n,))
+        for i in range(n):
+            span = tokens[i, span_start[i]:span_start[i] + A]
+            tokens[i, -A - 1] = task.query_token
+            tokens[i, -A:] = span
+        loss_mask[:, -A:] = 1.0                    # predict the copied span
+    else:
+        raise ValueError(task.kind)
+
+    inputs = tokens[:, :-1].astype(np.int32)
+    labels = tokens[:, 1:].astype(np.int32)
+    return {"tokens": inputs, "labels": labels, "loss_mask": loss_mask,
+            "class_labels": labels_cls.astype(np.int32)}
+
+
+def batches(dataset: Dict[str, np.ndarray], batch_size: int, steps: int,
+            seed: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    """Infinite shuffled batch stream (with-replacement epochs)."""
+    n = dataset["tokens"].shape[0]
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        idx = rng.integers(0, n, size=(batch_size,))
+        yield {k: v[idx] for k, v in dataset.items()}
+
+
+def classification_accuracy(cfg_model, params, dataset, task: TaskConfig,
+                            lm_module, max_examples: int = 256) -> float:
+    """Argmax-over-verbalizers accuracy at the answer position."""
+    import jax.numpy as jnp
+    n = min(max_examples, dataset["tokens"].shape[0])
+    toks = jnp.asarray(dataset["tokens"][:n])
+    hidden, _, _ = lm_module.forward(cfg_model, params, toks, mode="train")
+    logits = lm_module.logits_fn(cfg_model, params, hidden[:, -1])  # answer pos
+    verb = jnp.asarray(task.verbalizers)
+    pred = jnp.argmax(logits[:, verb], axis=-1)
+    return float(jnp.mean(pred == jnp.asarray(dataset["class_labels"][:n])))

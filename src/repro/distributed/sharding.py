@@ -1,0 +1,149 @@
+"""Sharding rules: parameter, activation and cache placement per arch.
+
+Layout summary (Megatron-style TP on the ``model`` axis, batch on
+``data`` and, multi-pod, ``pod``):
+
+  * embeddings: vocab-sharded; LM head: vocab-sharded output.
+  * attention/MLA: column-parallel QKV (heads on model), row-parallel
+    output projection.
+  * FFN / MoE experts: column-parallel up/gate, row-parallel down.
+    Experts are TP-sharded on d_ff, NOT expert-sharded — router and
+    dispatch stay device-local (see models.moe docstring).
+  * mamba: column-parallel in_proj (d_inner on model), channel-sharded
+    conv/ssm params, row-parallel out_proj.
+  * mLSTM/sLSTM: replicated block weights.  The q/k/v maps contract the
+    full d_inner (cross-head mixing), which TP cannot split without
+    changing the math; at xlstm-350m scale replication costs <1 GiB per
+    device.  Recorded as an accepted trade-off (DESIGN.md §4, roofline
+    notes the replicated perturbation work).
+  * KV caches: batch on data(+pod), *sequence* on model — always
+    divisible (unlike kv_heads=8 on a 16-way axis) and it is what makes
+    32k/500k caches fit; decode attention becomes flash-decode style
+    (partial scores + small collectives), which XLA SPMD derives.
+
+Every rule is divisibility-checked against the mesh: a dimension that
+does not divide falls back to replication rather than failing, so the
+same rule table serves every (arch x mesh) cell.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf name -> which dim (negative, from the end) is sharded on `model`
+_COL = {"wq": -1, "wk": -1, "wv": -1, "wg": -1, "wu": -1, "wi": -1,
+        "ws_g": -1, "ws_u": -1, "in_proj": -1, "dt_w": -1, "conv_w": -1,
+        "conv_b": -1, "Dskip": -1, "wuk": -1, "wuv": -1, "we_g": -1,
+        "we_u": -1, "dt_b": -1}
+_ROW = {"wo": -2, "wd": -2, "ws_d": -2, "out_proj": -2, "x_proj": -2,
+        "A_log": -2, "we_d": -2}
+_REPL = {"norm", "scale", "bias", "router", "wdkv", "kv_norm", "q_norm",
+         "k_norm", "b_i", "b_f", "b", "rh", "out_norm", "A", "B"}
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(shape, dim, mesh, axis="model"):
+    n = mesh.shape[axis]
+    d = dim if dim >= 0 else len(shape) + dim
+    return 0 <= d < len(shape) and shape[d] % n == 0 and shape[d] >= n
+
+
+def _block_kind(cfg, path_parts):
+    si = int(path_parts[1][1:])
+    bj = int(path_parts[2][1:])
+    return cfg.stages[si].pattern[bj].kind
+
+
+def param_pspec(cfg, path: str, shape, mesh: Mesh) -> P:
+    parts = path.split("/")
+    name = parts[-1]
+    nd = len(shape)
+    repl = P(*([None] * nd))
+    if parts[0] == "embed":
+        if name == "tok" and _div(shape, 0, mesh):
+            return P("model", *([None] * (nd - 1)))
+        return repl
+    if parts[0] == "head":
+        if _div(shape, -1, mesh):
+            return P(*([None] * (nd - 1)), "model")
+        return repl
+    if parts[0] != "stages":
+        return repl
+    kind = _block_kind(cfg, parts)
+    if kind in ("mlstm", "slstm") and parts[3] == "mix":
+        return repl                       # replicated recurrent blocks
+    if name in ("pk", "pv"):              # prefix KV: heads dim is -2
+        if _div(shape, -2, mesh):
+            return P(*([None] * (nd - 2)), "model", None)
+        return repl
+    if name in _COL and _div(shape, _COL[name], mesh):
+        d = nd + _COL[name]
+        return P(*[("model" if i == d else None) for i in range(nd)])
+    if name in _ROW and _div(shape, _ROW[name], mesh):
+        d = nd + _ROW[name]
+        return P(*[("model" if i == d else None) for i in range(nd)])
+    return repl
+
+
+def cache_pspec(path: str, shape, mesh: Mesh) -> P:
+    """Decode/prefill cache leaves: (R, B, ...) — see module docstring."""
+    name = path.split("/")[-1]
+    nd = len(shape)
+    ba = batch_axes(mesh)
+    nb = 1
+    for a in ba:
+        nb *= mesh.shape[a]
+    b_ax = ba if (shape[1] % nb == 0 and shape[1] >= nb) else None
+    spec = [None, b_ax] + [None] * (nd - 2)
+    if name in ("k", "v", "ckv", "kr") and _div(shape, 2, mesh):
+        spec[2] = "model"                       # sequence dim
+    elif name == "conv" and _div(shape, 3, mesh):
+        spec[3] = "model"                       # channels
+    elif name == "ssm" and _div(shape, 2, mesh):
+        spec[2] = "model"                       # d_inner
+    elif name in ("C", "n", "c", "h", "m") and nd >= 3 and _div(shape, -1, mesh):
+        spec[-1] = "model"                      # head dim of lstm states
+    return P(*spec)
+
+
+def data_pspec(shape, mesh: Mesh) -> P:
+    ba = batch_axes(mesh)
+    nb = 1
+    for a in ba:
+        nb *= mesh.shape[a]
+    lead = ba if (shape[0] % nb == 0 and shape[0] >= nb) else None
+    return P(lead, *([None] * (len(shape) - 1)))
+
+
+def _tree_map_with_path(fn, tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        ps = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path)
+        out.append(fn(ps, leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def params_sharding(cfg, params_shapes, mesh: Mesh):
+    return _tree_map_with_path(
+        lambda ps, leaf: NamedSharding(mesh, param_pspec(cfg, ps, leaf.shape,
+                                                         mesh)),
+        params_shapes)
+
+
+def cache_sharding(cache_shapes, mesh: Mesh):
+    return _tree_map_with_path(
+        lambda ps, leaf: NamedSharding(mesh, cache_pspec(ps, leaf.shape, mesh)),
+        cache_shapes)
+
+
+def batch_sharding(batch_shapes, mesh: Mesh):
+    return _tree_map_with_path(
+        lambda ps, leaf: NamedSharding(mesh, data_pspec(leaf.shape, mesh)),
+        batch_shapes)

@@ -1,0 +1,234 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the very first lines — before any other import — since jax locks
+the device count on first init:
+"""
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs                      # noqa: E402
+from repro.configs.shapes import SHAPES, shapes_for  # noqa: E402
+from repro.launch import analysis, specs       # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import frontends, lm         # noqa: E402
+
+# ------------------------------------------------------------- roofline
+# TPU v5e per-chip constants (assignment-specified).
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3": 1,
+                "f8e5m2": 1, "s16": 2, "u16": 2, "c64": 8, "tuple": 0,
+                "token": 0, "bf8": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(\w+)\[([\d,]*)\][^\s]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result sizes of collective ops, per op kind (per-device view)."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dtype is None:
+            continue
+        out[kind] = out.get(kind, 0) + _shape_bytes(dtype, dims)
+    for m in _TUPLE_RE.finditer(hlo_text):
+        inner, kind = m.group(1), m.group(2)
+        for sm in _SHAPE_RE.finditer(inner):
+            out[kind] = out.get(kind, 0) + _shape_bytes(sm.group(1), sm.group(2))
+    return out
+
+
+def roofline_terms(cost, mem, coll, n_chips):
+    """Three roofline terms in seconds (per-step, per-chip)."""
+    flops = cost.get("flops", 0.0)
+    bytes_hbm = cost.get("bytes accessed", 0.0)
+    bytes_coll = float(sum(coll.values()))
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_hbm / HBM_BW,
+        "collective_s": bytes_coll / ICI_BW,
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_hbm,
+        "collective_bytes": bytes_coll,
+        "collective_breakdown": coll,
+        "n_chips": n_chips,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for train (3 passes: 2 fwd ~ 2ND each + ZO has no bwd
+    -> 2 forwards = 4*N*D ... we report the standard 6ND training-FLOPs
+    convention scaled to ZO: 2 forwards = 2 * 2*N*D tokens).  For decode,
+    one token per sequence."""
+    pshapes = specs.param_specs(cfg)
+    n_active = lm.count_active_params(cfg, pshapes)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * 2.0 * n_active * tokens      # two SPSA forwards
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/seq
+
+
+# ------------------------------------------------------------- lowering
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = "optimized", overrides: dict = None):
+    cfg = configs.get(arch)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ins = specs.input_specs(cfg, shape)
+    with mesh:
+        if shape.kind == "train":
+            shard_fn, pshapes = specs.build_train_step(cfg, mesh, variant)
+            fn = shard_fn(ins["batch"])
+            lowered = fn.lower(pshapes, ins["batch"],
+                               jax.ShapeDtypeStruct((), jnp.int32),
+                               jax.ShapeDtypeStruct((), jnp.uint32))
+        elif shape.kind == "prefill":
+            shard_fn, pshapes = specs.build_prefill_step(cfg, mesh,
+                                                         shape.seq_len)
+            fn = shard_fn(shape.global_batch)
+            data = ins.get("tokens", ins.get("embeds"))
+            lowered = fn.lower(pshapes, data)
+        else:  # decode
+            fn, pshapes, cshapes = specs.build_serve_step(
+                cfg, mesh, shape.seq_len, shape.global_batch)
+            data = ins.get("token", ins.get("embeds"))
+            lowered = fn.lower(pshapes, ins["caches"], data, ins["pos"])
+        compiled = lowered.compile()
+    return cfg, shape, mesh, lowered, compiled
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "optimized", verbose: bool = True,
+             hlo_dir: str = None, overrides: dict = None):
+    t0 = time.time()
+    cfg, shape, mesh, lowered, compiled = lower_cell(
+        arch, shape_name, multi_pod, variant, overrides)
+    n_chips = mesh.devices.size
+    if hlo_dir:
+        import gzip
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{'mp' if multi_pod else 'sp'}_{variant}"
+        with gzip.open(os.path.join(hlo_dir, tag + ".hlo.gz"), "wt") as f:
+            f.write(compiled.as_text())
+    ca_xla = compiled.cost_analysis()
+    ca_xla = ca_xla[0] if isinstance(ca_xla, (list, tuple)) else (ca_xla or {})
+    ma = compiled.memory_analysis()
+    # scan-aware analysis (XLA's cost_analysis counts while bodies once)
+    acc = analysis.analyze(compiled.as_text())
+    ca = {"flops": acc["flops"], "bytes accessed": acc["bytes"]}
+    coll = acc["collectives"]
+    terms = roofline_terms(ca, ma, coll, n_chips)
+    terms["xla_raw_flops"] = ca_xla.get("flops")
+    terms["xla_raw_bytes"] = ca_xla.get("bytes accessed")
+    mf = model_flops(cfg, shape)
+    mem = {}
+    if ma is not None:
+        mem = {"argument_bytes": ma.argument_size_in_bytes,
+               "output_bytes": ma.output_size_in_bytes,
+               "temp_bytes": ma.temp_size_in_bytes,
+               "alias_bytes": ma.alias_size_in_bytes}
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "n_chips": int(n_chips),
+        "compile_s": round(time.time() - t0, 1),
+        "memory": mem,
+        "roofline": terms,
+        "model_flops_global": mf,
+        "model_flops_per_chip": mf / n_chips,
+        "useful_flop_ratio": (mf / n_chips) / terms["hlo_flops"]
+        if terms["hlo_flops"] else None,
+    }
+    if verbose:
+        dom = max(("compute_s", "memory_s", "collective_s"),
+                  key=lambda k: terms[k])
+        print(f"[{arch} x {shape_name} x {rec['mesh']} x {variant}] "
+              f"compile={rec['compile_s']}s "
+              f"compute={terms['compute_s']*1e3:.2f}ms "
+              f"memory={terms['memory_s']*1e3:.2f}ms "
+              f"coll={terms['collective_s']*1e3:.2f}ms "
+              f"dom={dom} temp={mem.get('temp_bytes', 0)/2**30:.2f}GiB "
+              f"useful={rec['useful_flop_ratio'] and round(rec['useful_flop_ratio'], 3)}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--variant", default="optimized",
+                    choices=["optimized", "faithful", "mezo"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", default=None, help="dir for gzipped HLO")
+    args = ap.parse_args()
+
+    cells = []
+    archs = [a for a in configs.list_archs() if a != "opt-13b"] \
+        if args.all else [args.arch]
+    for arch in archs:
+        cfg = configs.get(arch)
+        shapes = ([SHAPES[args.shape]] if args.shape else shapes_for(cfg))
+        for sh in shapes:
+            meshes = [False, True] if (args.both_meshes or args.all) \
+                else [args.multi_pod]
+            for mp in meshes:
+                cells.append((arch, sh.name, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    results, failures = [], []
+    for arch, shape_name, mp in cells:
+        try:
+            rec = run_cell(arch, shape_name, mp, args.variant,
+                           hlo_dir=args.save_hlo)
+            results.append(rec)
+            tag = f"{arch}_{shape_name}_{'mp' if mp else 'sp'}_{args.variant}"
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+        except Exception as e:  # noqa: BLE001 — report every cell
+            failures.append((arch, shape_name, mp, repr(e)[:300]))
+            print(f"FAIL [{arch} x {shape_name} x "
+                  f"{'mp' if mp else 'sp'}]: {e!r}"[:400])
+    print(f"\n{len(results)} cells passed, {len(failures)} failed")
+    for f in failures:
+        print("  FAIL:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips (TPU v5e pod), axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — the ``pod``
+axis carries pure data parallelism, which for ZO fine-tuning costs one
+scalar all-reduce per forward (see DESIGN.md §3): the DCN between pods is
+effectively idle, which is the property that lets LeZO scale to
+arbitrarily many pods.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state; the dry-run sets
+``xla_force_host_platform_device_count=512`` *before* any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

@@ -1,0 +1,26 @@
+"""Stub modality frontends (per the assignment: backbone only).
+
+For `[audio]` (musicgen: EnCodec frame embeddings) and `[vlm]`
+(internvl2: InternViT patch embeddings) the frontend is NOT implemented;
+``input_specs()`` hands the backbone precomputed (B, S, D) embeddings.
+These helpers produce deterministic pseudo-embeddings for smoke tests and
+the matching ShapeDtypeStructs for the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def stub_embeddings(cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+    """Deterministic fake frame/patch embeddings, unit RMS."""
+    key = jax.random.PRNGKey(seed)
+    e = jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32)
+    return (e / jnp.sqrt(jnp.mean(e ** 2, -1, keepdims=True))).astype(
+        jnp.dtype(cfg.dtype))
+
+
+def uses_embeds(cfg: ModelConfig) -> bool:
+    return cfg.frontend in ("audio", "vision")

@@ -1,0 +1,345 @@
+"""Core transformer layers: norms, RoPE, flash attention (GQA + MLA), FFN.
+
+All functions are pure; a *block*'s parameters arrive unstacked (one
+layer's slice — the stage scan in lm.py slices the stacked leaves).
+Activations are (B, S, D) in cfg.dtype; matmuls accumulate in f32 via
+``preferred_element_type``.
+
+Attention is a chunked flash implementation (double lax.scan over q- and
+k-chunks with running log-sum-exp), so peak memory is O(q_chunk * k_chunk)
+instead of O(S^2) — required for the 32k-prefill shapes to fit a v5e.
+Fully-masked k-chunks are skipped with a real ``lax.cond`` branch, halving
+causal-attention FLOPs at the HLO level.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed import ctx
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- norms
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(F32)), axis=-1, keepdims=True)
+    y = x.astype(F32) * lax.rsqrt(var + eps) * scale.astype(F32)
+    return y.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps) * scale.astype(F32) + bias.astype(F32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def norm_params(cfg, d):
+    if cfg.norm == "rms":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+# ------------------------------------------------------------------ rope
+def rope(x, positions, theta=10000.0):
+    """x: (..., S, n, d) with d even; positions: (S,)."""
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=F32) / d))
+    ang = positions.astype(F32)[:, None] * freqs[None, :]        # (S, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------- flash attention
+@functools.partial(jax.jit, static_argnames=("causal", "q_chunk", "k_chunk",
+                                              "k_offset"))
+def flash_attention(q, k, v, *, causal=True, q_offset=0, k_offset=0,
+                    q_chunk=512, k_chunk=512):
+    """q: (B,Sq,KV,G,dh), k/v: (B,Sk,KV,dh). Returns (B,Sq,KV,G,dh).
+
+    ``q_offset``: absolute position of q[0] (for prefill continuation).
+    ``k_offset``: position of k[0]; a negative value marks leading
+    always-visible tokens (prefix tuning).
+    """
+    B, Sq, KV, G, dh = q.shape
+    Sk = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    k_chunk = min(k_chunk, Sk)
+    assert Sq % q_chunk == 0
+    if Sk % k_chunk:  # pad keys (padded slots masked out via position test)
+        pad = k_chunk - Sk % k_chunk
+        k = jnp.pad(k, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, pad), (0, 0), (0, 0)])
+    nq, nk = Sq // q_chunk, k.shape[1] // k_chunk
+    scale = dh ** -0.5
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+
+    qc = q.reshape(B, nq, q_chunk, KV, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nk, k_chunk, KV, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, k_chunk, KV, dh).transpose(1, 0, 2, 3, 4)
+
+    def q_body(_, qi_and_chunk):
+        qi, qblk = qi_and_chunk
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def k_body(carry, ki_and_chunk):
+            ki, kblk, vblk = ki_and_chunk
+            k_idx = ki * k_chunk + jnp.arange(k_chunk)
+            k_pos = k_offset + k_idx
+
+            def compute(carry):
+                m, l, acc = carry
+                s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk,
+                               preferred_element_type=F32) * scale
+                msk = k_idx[None, :] < Sk          # mask key padding
+                if causal:
+                    msk = msk & (q_pos[:, None] >= k_pos[None, :])
+                s = jnp.where(msk[None, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                pv = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(qblk.dtype), vblk,
+                                preferred_element_type=F32)
+                acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+                return m_new, l_new, acc_new
+
+            if causal:
+                needed = k_offset + ki * k_chunk <= q_pos[-1]
+                carry = lax.cond(needed, compute, lambda c: c, carry)
+            else:
+                carry = compute(carry)
+            return carry, None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, F32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), F32)
+        a0 = jnp.zeros((B, q_chunk, KV, G, dh), F32)
+        (m, l, acc), _ = lax.scan(
+            k_body, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, out = lax.scan(q_body, None, (jnp.arange(nq), qc))
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, dh)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len):
+    """Single-token attention over a (possibly partially filled) cache.
+
+    q: (B,1,KV,G,dh); caches: (B,Smax,KV,dh); cur_len: int32 — number of
+    valid cache entries *including* the current token.
+    """
+    B, _, KV, G, dh = q.shape
+    Smax = k_cache.shape[1]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k_cache,
+                   preferred_element_type=F32) * (dh ** -0.5)
+    valid = jnp.arange(Smax) < cur_len
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(q.dtype), v_cache,
+                     preferred_element_type=F32)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------- GQA block
+def attn_params(cfg, key):
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    std = D ** -0.5
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "norm": norm_params(cfg, D),
+        "wq": jax.random.normal(ks[0], (D, H * dh), dt) * std,
+        "wk": jax.random.normal(ks[1], (D, KV * dh), dt) * std,
+        "wv": jax.random.normal(ks[2], (D, KV * dh), dt) * std,
+        "wo": jax.random.normal(ks[3], (H * dh, D), dt) * (H * dh) ** -0.5,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((dh,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.ones((dh,), jnp.float32)}
+    return p
+
+
+def attn_fwd(cfg, p, x, *, mode, cache=None, pos=0):
+    """mode: train | prefill | decode.  Returns (out, new_cache)."""
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    h = apply_norm(cfg, p["norm"], x)
+    q = (h @ p["wq"]).reshape(B, S, H, dh)
+    k = (h @ p["wk"]).reshape(B, S, KV, dh)
+    v = (h @ p["wv"]).reshape(B, S, KV, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"]["scale"])
+        k = rms_norm(k, p["k_norm"]["scale"])
+    positions = pos + jnp.arange(S)
+    if cfg.pos_emb == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = q.reshape(B, S, KV, G, dh)
+    if mode != "decode":
+        mesh = ctx.get_mesh()
+        nm = mesh.shape.get("model", 1) if mesh is not None else 1
+        if mesh is not None and KV % nm == 0:
+            # Pin q/k/v head-sharded once per layer so the flash scan sees
+            # a stable layout (otherwise the partitioner re-gathers k/v in
+            # f32 every inner iteration).
+            k = ctx.constrain(k, "batch", None, "model", None)
+            v = ctx.constrain(v, "batch", None, "model", None)
+            q = ctx.constrain(q, "batch", None, "model", None, None)
+        elif mesh is not None and nm > 1 and S % nm == 0:
+            # Heads don't divide the model axis (e.g. 56 heads / 16): left
+            # alone, the partitioner keeps dh sharded and ALL-REDUCES the
+            # score blocks of every flash iteration (TBs/step).  Instead
+            # shard attention over *query stripes* (sequence parallel):
+            # one bf16 k/v gather per layer, zero score collectives.
+            q = ctx.constrain(q, "batch", "model", None, None, None)
+            k = ctx.constrain(k, "batch", None, None, None)
+            v = ctx.constrain(v, "batch", None, None, None)
+
+    if mode == "decode":
+        k_cache = lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        v_cache = lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        o = decode_attention(q, k_cache, v_cache, pos + 1)
+        new_cache = {"k": k_cache, "v": v_cache}
+    elif "pk" in p:  # prefix tuning: always-visible learned KV pairs
+        P = p["pk"].shape[0]
+        pk = jnp.broadcast_to(p["pk"].astype(k.dtype), (B, P, KV, dh))
+        pv = jnp.broadcast_to(p["pv"].astype(v.dtype), (B, P, KV, dh))
+        kf = jnp.concatenate([pk, k], axis=1)
+        vf = jnp.concatenate([pv, v], axis=1)
+        o = flash_attention(q, kf, vf, causal=True, q_offset=pos, k_offset=-P,
+                            q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+        new_cache = None
+    else:
+        o = flash_attention(q, k, v, causal=True, q_offset=pos,
+                            q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+        new_cache = None
+        if mode == "prefill":
+            Smax = cache["k"].shape[1]
+            pad = [(0, 0), (0, Smax - S), (0, 0), (0, 0)]
+            new_cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    out = o.reshape(B, S, H * dh) @ p["wo"]
+    return out.astype(x.dtype), new_cache
+
+
+# --------------------------------------------------------------- MLA block
+def mla_params(cfg, key):
+    D, H = cfg.d_model, cfg.n_heads
+    dn, dr, lora = cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora
+    ks = jax.random.split(key, 5)
+    std = D ** -0.5
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "norm": norm_params(cfg, D),
+        "wq": jax.random.normal(ks[0], (D, H * (dn + dr)), dt) * std,
+        "wdkv": jax.random.normal(ks[1], (D, lora + dr), dt) * std,
+        "kv_norm": {"scale": jnp.ones((lora,), jnp.float32)},
+        "wuk": jax.random.normal(ks[2], (lora, H * dn), dt) * lora ** -0.5,
+        "wuv": jax.random.normal(ks[3], (lora, H * dn), dt) * lora ** -0.5,
+        "wo": jax.random.normal(ks[4], (H * dn, D), dt) * (H * dn) ** -0.5,
+    }
+
+
+def mla_fwd(cfg, p, x, *, mode, cache=None, pos=0):
+    """DeepSeek-V2 multi-head latent attention.
+
+    Cache holds only (c_kv, k_rope): (lora + rope_dim) per token.  Decode
+    uses the weight-absorbed latent form — scores and values are computed
+    directly against the latent cache, never materializing per-head K/V.
+    """
+    B, S, D = x.shape
+    H, dn, dr, lora = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora
+    h = apply_norm(cfg, p["norm"], x)
+    q = (h @ p["wq"]).reshape(B, S, H, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    dkv = h @ p["wdkv"]
+    ckv = rms_norm(dkv[..., :lora], p["kv_norm"]["scale"])   # (B,S,lora)
+    kr = dkv[..., lora:].reshape(B, S, 1, dr)
+    positions = pos + jnp.arange(S)
+    qr = rope(qr, positions, cfg.rope_theta)
+    kr = rope(kr, positions, cfg.rope_theta)
+    scale_fix = (dn + dr) ** -0.5  # flash/decode divide by per-part dims
+
+    if mode == "decode":
+        ckv_c = lax.dynamic_update_slice(cache["ckv"], ckv, (0, pos, 0))
+        kr_c = lax.dynamic_update_slice(cache["kr"], kr[:, :, 0], (0, pos, 0))
+        # absorbed: q_lat[b,h,l] = sum_d qn[b,h,d] * wuk[l, h*dn+d]
+        wuk = p["wuk"].reshape(lora, H, dn)
+        q_lat = jnp.einsum("bqhd,lhd->bqhl", qn, wuk, preferred_element_type=F32)
+        s = jnp.einsum("bqhl,bsl->bhqs", q_lat, ckv_c.astype(F32),
+                       preferred_element_type=F32)
+        s += jnp.einsum("bqhd,bsd->bhqs", qr.astype(F32), kr_c.astype(F32),
+                        preferred_element_type=F32)
+        s *= scale_fix
+        valid = jnp.arange(ckv_c.shape[1]) < pos + 1
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhqs,bsl->bqhl", pr, ckv_c.astype(F32),
+                           preferred_element_type=F32)
+        wuv = p["wuv"].reshape(lora, H, dn)
+        o = jnp.einsum("bqhl,lhd->bqhd", o_lat, wuv, preferred_element_type=F32)
+        o = o.astype(x.dtype)
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+    else:
+        kn = jnp.einsum("bsl,lhd->bshd", ckv, p["wuk"].reshape(lora, H, dn))
+        vv = jnp.einsum("bsl,lhd->bshd", ckv, p["wuv"].reshape(lora, H, dn))
+        kfull = jnp.concatenate([kn, jnp.broadcast_to(kr, (B, S, H, dr))], -1)
+        qfull = jnp.concatenate([qn, qr], -1).reshape(B, S, H, 1, dn + dr)
+        vpad = jnp.pad(vv, [(0, 0), (0, 0), (0, 0), (0, dr)])
+        o = flash_attention(qfull, kfull, vpad, causal=True, q_offset=pos,
+                            q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk)
+        o = o.reshape(B, S, H, dn + dr)[..., :dn]
+        new_cache = None
+        if mode == "prefill":
+            Smax = cache["ckv"].shape[1]
+            new_cache = {
+                "ckv": jnp.pad(ckv, [(0, 0), (0, Smax - S), (0, 0)]),
+                "kr": jnp.pad(kr[:, :, 0], [(0, 0), (0, Smax - S), (0, 0)]),
+            }
+    out = o.reshape(B, S, H * dn) @ p["wo"]
+    return out.astype(x.dtype), new_cache
+
+
+# --------------------------------------------------------------- dense FFN
+def ffn_params(cfg, key, d_ff=None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    p = {"norm": norm_params(cfg, D)}
+    if cfg.act == "silu":  # swiglu
+        p["wg"] = jax.random.normal(ks[0], (D, F), dt) * D ** -0.5
+        p["wu"] = jax.random.normal(ks[1], (D, F), dt) * D ** -0.5
+    else:
+        p["wi"] = jax.random.normal(ks[0], (D, F), dt) * D ** -0.5
+    p["wd"] = jax.random.normal(ks[2], (F, D), dt) * F ** -0.5
+    return p
+
+
+def ffn_fwd(cfg, p, x, d_ff=None):
+    h = apply_norm(cfg, p["norm"], x)
+    if cfg.act == "silu":
+        a = jax.nn.silu((h @ p["wg"]).astype(F32)).astype(x.dtype) * (h @ p["wu"])
+    elif cfg.act == "gelu":
+        a = jax.nn.gelu((h @ p["wi"]).astype(F32)).astype(x.dtype)
+    else:
+        a = jax.nn.relu(h @ p["wi"])
+    return (a @ p["wd"]).astype(x.dtype)

@@ -1,0 +1,281 @@
+"""Decoder-only LM assembly: init, train loss, prefill, decode.
+
+Parameters live in a dict tree::
+
+    {"embed": {"tok": (V, D) [, "pos": (max_seq, D)]},
+     "final_norm": {...},
+     ["head": {"w": (D, V)}]                      # absent when tied
+     "stages": {"s0": {"b0": {...}, "b1": {...}}, ...}}
+
+where every leaf under ``stages/s{i}/b{j}`` is stacked over that stage's
+``repeat`` on axis 0.  Execution is a ``lax.scan`` over repeat per stage
+(compile-time O(1) in depth — critical for 62-layer models on a
+512-device mesh); each scan body runs the stage's block *pattern* in
+order, so heterogeneous interleaves (jamba's mamba/attn, xlstm's
+mlstm/slstm) execute in their true layer order.
+
+LeZO integration: ``zo_group_fn`` labels each stages/ leaf with its
+(stage, pattern-position) group; embeddings / head / final norm are
+always-perturbed (the paper never drops them — and Fig. 3 shows dropping
+everything *but* them collapses).
+
+The LM loss is a chunked cross-entropy (scan over sequence chunks): the
+(B, S, V) logits tensor never materializes — at 152k vocab x 4k seq that
+is the difference between fitting a v5e and a 20 GiB OOM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers, moe, ssm
+from repro.models.config import BlockCfg, ModelConfig
+
+F32 = jnp.float32
+CE_CHUNK = 512
+
+
+# ------------------------------------------------------------------ init
+def _block_params(cfg: ModelConfig, b: BlockCfg, key):
+    kmix, kffn = jax.random.split(key)
+    if b.kind == "attn":
+        p = {"mix": layers.attn_params(cfg, kmix)}
+    elif b.kind == "mla":
+        p = {"mix": layers.mla_params(cfg, kmix)}
+    elif b.kind == "mamba":
+        p = {"mix": ssm.mamba_params(cfg, kmix)}
+    elif b.kind == "mlstm":
+        p = {"mix": ssm.mlstm_params(cfg, kmix)}
+    elif b.kind == "slstm":
+        p = {"mix": ssm.slstm_params(cfg, kmix)}
+    else:
+        raise ValueError(f"unknown block kind {b.kind!r}")
+    if b.ffn == "dense":
+        p["ffn"] = layers.ffn_params(cfg, kffn, d_ff=b.d_ff or cfg.d_ff)
+    elif b.ffn == "moe":
+        p["ffn"] = moe.moe_params(cfg, kffn)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, len(cfg.stages) + 2)
+    dt = jnp.dtype(cfg.dtype)
+    params: Dict[str, Any] = {
+        "embed": {"tok": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model), dt)
+                  * 0.02},
+        "final_norm": layers.norm_params(cfg, cfg.d_model),
+    }
+    if cfg.pos_emb == "learned":
+        params["embed"]["pos"] = (
+            jax.random.normal(jax.random.fold_in(keys[0], 1),
+                              (cfg.max_seq, cfg.d_model), dt) * 0.02)
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab), dt) * cfg.d_model ** -0.5}
+    stages = {}
+    for si, st in enumerate(cfg.stages):
+        skey = keys[2 + si]
+        blocks = {}
+        for bj, b in enumerate(st.pattern):
+            bkeys = jax.random.split(jax.random.fold_in(skey, bj), st.repeat)
+            blocks[f"b{bj}"] = jax.vmap(
+                functools.partial(_block_params, cfg, b))(bkeys)
+        stages[f"s{si}"] = blocks
+    params["stages"] = stages
+    return params
+
+
+def zo_group_fn(path: str) -> Optional[str]:
+    """Leaf path -> LeZO layer group (stacked axis 0) or None (always on)."""
+    if path.startswith("stages/"):
+        parts = path.split("/")
+        return f"{parts[1]}.{parts[2]}"          # e.g. "s0.b3"
+    return None
+
+
+def count_params(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def count_active_params(cfg: ModelConfig, params) -> int:
+    """MoE-aware 'active per token' count for MODEL_FLOPS = 6*N_active*D."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        ps = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        n = leaf.size
+        if "we_g" in ps or "we_u" in ps or "we_d" in ps:
+            n = n * cfg.top_k // cfg.n_experts
+        if "embed/tok" in ps or "embed/pos" in ps:
+            n = 0  # embedding lookup is not a matmul
+        total += n
+    return total
+
+
+# --------------------------------------------------------------- forward
+_MIX_FWD = {"attn": layers.attn_fwd, "mla": layers.mla_fwd,
+            "mamba": ssm.mamba_fwd, "mlstm": ssm.mlstm_fwd,
+            "slstm": ssm.slstm_fwd}
+
+
+def _run_block(cfg, b: BlockCfg, p, x, *, mode, cache, pos):
+    mix_out, new_cache = _MIX_FWD[b.kind](cfg, p["mix"], x, mode=mode,
+                                          cache=cache, pos=pos)
+    x = x + mix_out
+    aux = jnp.zeros((), F32)
+    if b.ffn == "dense":
+        x = x + layers.ffn_fwd(cfg, p["ffn"], x, d_ff=b.d_ff or cfg.d_ff)
+    elif b.ffn == "moe":
+        y, aux = moe.moe_fwd(cfg, p["ffn"], x)
+        x = x + y
+    return x, new_cache, aux
+
+
+def forward(cfg: ModelConfig, params, tokens, *, mode="train", caches=None,
+            pos=0, embeds=None):
+    """tokens: (B, S) int32, or ``embeds``: (B, S, D) for stub frontends.
+
+    mode: train (no cache) | prefill (build cache) | decode (S==1, use+
+    advance cache).  Returns (hidden (B,S,D), new_caches, aux_loss).
+    """
+    if embeds is not None:
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+    else:
+        x = params["embed"]["tok"][tokens]
+    if cfg.pos_emb == "learned":
+        S = x.shape[1]
+        x = x + lax.dynamic_slice_in_dim(params["embed"]["pos"], pos, S, 0)
+
+    aux_total = jnp.zeros((), F32)
+    new_caches: Dict[str, Any] = {}
+    for si, st in enumerate(cfg.stages):
+        sp = params["stages"][f"s{si}"]
+        scache = caches[f"s{si}"] if caches is not None else None
+
+        def body(x_aux, sliced):
+            x, aux = x_aux
+            bp_all, bc_all = sliced
+            ncs = {}
+            for bj, b in enumerate(st.pattern):
+                bc = bc_all[f"b{bj}"] if bc_all is not None else None
+                x, nc, a = _run_block(cfg, b, bp_all[f"b{bj}"], x,
+                                      mode=mode, cache=bc, pos=pos)
+                aux = aux + a
+                if nc is not None:
+                    ncs[f"b{bj}"] = nc
+            return (x, aux), (ncs if ncs else None)
+
+        if st.repeat == 1:
+            squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
+            (x, aux_total), nc = body((x, aux_total),
+                                      (squeeze(sp),
+                                       squeeze(scache) if scache is not None else None))
+            if nc is not None:
+                new_caches[f"s{si}"] = jax.tree.map(lambda a: a[None], nc)
+        else:
+            (x, aux_total), nc = lax.scan(
+                body, (x, aux_total),
+                (sp, scache) if scache is not None else (sp, None))
+            if nc is not None:
+                new_caches[f"s{si}"] = nc
+    x = layers.apply_norm(cfg, params["final_norm"], x)
+    return x, (new_caches if new_caches else None), aux_total
+
+
+def _head_matrix(cfg, params):
+    if cfg.tie_embeddings:
+        return params["embed"]["tok"].T
+    return params["head"]["w"]
+
+
+def logits_fn(cfg, params, hidden):
+    return (hidden @ _head_matrix(cfg, params)).astype(F32)
+
+
+def chunked_ce(cfg, params, hidden, labels, loss_mask):
+    """Mean CE over masked positions without materializing (B,S,V) logits."""
+    B, S, D = hidden.shape
+    chunk = min(CE_CHUNK, S)
+    assert S % chunk == 0
+    n = S // chunk
+    W = _head_matrix(cfg, params)
+    resh = lambda a: a.reshape(B, n, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    def body(carry, inp):
+        h, y, m = inp
+        lg = (h @ W).astype(F32)                              # (B,chunk,V)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, y[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(m)), None
+
+    (tot, cnt), _ = lax.scan(body, (jnp.zeros((), F32), jnp.zeros((), F32)),
+                             (resh(hidden), resh(labels), resh(loss_mask.astype(F32))))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(cfg: ModelConfig, params, batch, aux_coef=0.0):
+    """batch: {tokens (B,S) int32, labels (B,S) int32, loss_mask (B,S)} or
+    {embeds (B,S,D), labels, loss_mask} for stub-frontend archs."""
+    hidden, _, aux = forward(cfg, params, batch.get("tokens"),
+                             embeds=batch.get("embeds"), mode="train")
+    loss = chunked_ce(cfg, params, hidden, batch["labels"], batch["loss_mask"])
+    return loss + aux_coef * aux
+
+
+# ---------------------------------------------------------------- serving
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """Build an empty cache pytree matching forward(mode='decode')."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    B = batch
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    caches: Dict[str, Any] = {}
+    for si, st in enumerate(cfg.stages):
+        blocks = {}
+        for bj, b in enumerate(st.pattern):
+            R = st.repeat
+            if b.kind == "attn":
+                c = {"k": jnp.zeros((R, B, max_seq, KV, dh), dt),
+                     "v": jnp.zeros((R, B, max_seq, KV, dh), dt)}
+            elif b.kind == "mla":
+                c = {"ckv": jnp.zeros((R, B, max_seq, cfg.kv_lora), dt),
+                     "kr": jnp.zeros((R, B, max_seq, cfg.rope_head_dim), dt)}
+            elif b.kind == "mamba":
+                Di = cfg.mamba_d_inner
+                c = {"conv": jnp.zeros((R, B, cfg.mamba_conv - 1, Di), dt),
+                     "ssm": jnp.zeros((R, B, Di, cfg.mamba_d_state), F32)}
+            elif b.kind == "mlstm":
+                Di = cfg.lstm_d_inner
+                dhh = Di // H
+                c = {"conv": jnp.zeros((R, B, 3, Di), dt),
+                     "C": jnp.zeros((R, B, H, dhh, dhh), F32),
+                     "n": jnp.zeros((R, B, H, dhh), F32),
+                     "m": jnp.full((R, B, H), -jnp.inf, F32)}
+            else:  # slstm
+                dhh = cfg.d_model // H
+                z = jnp.zeros((R, B, H, dhh), F32)
+                c = {"c": z, "n": z, "h": z,
+                     "m": jnp.full((R, B, H, dhh), -jnp.inf, F32)}
+            blocks[f"b{bj}"] = c
+        caches[f"s{si}"] = blocks
+    return caches
+
+
+def serve_step(cfg: ModelConfig, params, caches, token, pos, embeds=None):
+    """One decode step. token: (B, 1) int32; pos: scalar int32 (current
+    length of the cache). Returns (logits (B, V) f32, new_caches)."""
+    hidden, new_caches, _ = forward(cfg, params, token, mode="decode",
+                                    caches=caches, pos=pos, embeds=embeds)
+    return logits_fn(cfg, params, hidden[:, -1]), new_caches
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_seq: int, embeds=None):
+    """Run the prompt through the model, returning (logits_last, caches)."""
+    B = (tokens if tokens is not None else embeds).shape[0]
+    caches = init_cache(cfg, B, max_seq)
+    hidden, new_caches, _ = forward(cfg, params, tokens, mode="prefill",
+                                    caches=caches, pos=0, embeds=embeds)
+    return logits_fn(cfg, params, hidden[:, -1]), new_caches

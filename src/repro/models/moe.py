@@ -1,0 +1,133 @@
+"""Mixture-of-Experts FFN with sort-based static-shape dispatch.
+
+Routing is DeepSeek/Granite-style: softmax over experts, top-k, renormalize.
+Dispatch uses the production sort-based scheme (static shapes, capacity
+drop): token-expert assignments are sorted by expert id, each expert gets a
+contiguous capacity-C slab of a (E*C, D) buffer, expert FFNs run as one
+batched einsum, and outputs scatter back weighted.  All shapes are static
+-> jit/pjit friendly.
+
+Sharding note (see distributed/sharding.py): expert weights are sharded
+over the *d_ff* axis (tensor parallelism inside every expert) rather than
+over the expert axis.  Router + dispatch then stay device-local (no
+all-to-all); the only collective is the usual TP reduce of the FFN output.
+An expert-sharded (EP) layout is the classic alternative — for ZO
+fine-tuning the TP layout wins because perturbation touches all experts
+uniformly and the dispatch buffers never cross devices.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import ctx
+from repro.models import layers
+
+F32 = jnp.float32
+
+
+def capacity(cfg, tokens: int) -> int:
+    """Per-dispatch-group expert capacity.
+
+    Never exceeds ``tokens`` (a token contributes each expert at most one
+    assignment since top-k picks are distinct), so single-token decode
+    groups get C=1."""
+    c = -(-int(tokens * cfg.top_k * cfg.capacity_factor) // cfg.n_experts)
+    return max(1, min(tokens, -(-c // 4) * 4 if tokens >= 4 else c))
+
+
+def moe_params(cfg, key):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "norm": layers.norm_params(cfg, D),
+        "router": jax.random.normal(ks[0], (D, E), jnp.float32) * D ** -0.5,
+        "we_g": jax.random.normal(ks[1], (E, D, F), dt) * D ** -0.5,
+        "we_u": jax.random.normal(ks[2], (E, D, F), dt) * D ** -0.5,
+        "we_d": jax.random.normal(ks[3], (E, F, D), dt) * F ** -0.5,
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * F
+        kss = jax.random.split(ks[4], 3)
+        p["ws_g"] = jax.random.normal(kss[0], (D, Fs), dt) * D ** -0.5
+        p["ws_u"] = jax.random.normal(kss[1], (D, Fs), dt) * D ** -0.5
+        p["ws_d"] = jax.random.normal(kss[2], (Fs, D), dt) * Fs ** -0.5
+    return p
+
+
+def moe_fwd(cfg, p, x):
+    """x: (B, S, D) -> (y, aux).
+
+    Dispatch groups = batch rows: capacity is per-row, so every sort /
+    cumsum / scatter is row-local and stays on the owning data shard.
+    Written batched (explicit B dim, not vmap) so the big intermediates
+    can carry sharding constraints — without them the SPMD partitioner
+    all-gathers the dispatch buffers globally.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, S)
+    h = ctx.constrain(layers.apply_norm(cfg, p["norm"], x),
+                      "batch", None, None)                     # (B, S, D)
+
+    logits = jnp.einsum("bsd,de->bse", h.astype(F32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                     # (B, S, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # Switch-style load-balance loss
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.zeros((B, E), F32).at[
+        jnp.arange(B)[:, None], top_e.reshape(B, -1)].add(1.0) / (S * k)
+    aux = E * jnp.sum(me * jnp.mean(ce, axis=0))
+
+    # ---- per-row sort-based dispatch (all ops row-local) ----------------
+    row = lambda a, *ax: ctx.constrain(a, "batch", *ax)
+    e_flat = top_e.reshape(B, S * k)
+    w_flat = top_w.reshape(B, S * k)
+    tok_flat = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S), k)[None], (B, S * k))
+    order = jnp.argsort(e_flat, axis=-1)
+    take = lambda a: jnp.take_along_axis(a, order, axis=-1)
+    e_s, w_s, tok_s = (row(take(e_flat), None), row(take(w_flat), None),
+                       row(take(tok_flat), None))
+    counts = jax.vmap(lambda e: jnp.zeros((E,), jnp.int32).at[e].add(1))(e_s)
+    starts = jnp.cumsum(counts, axis=-1) - counts
+    pos = jnp.arange(S * k)[None] - jnp.take_along_axis(starts, e_s, axis=-1)
+    keep = pos < C
+    slot = row(jnp.where(keep, e_s * C + pos, E * C), None)    # E*C = trash
+
+    h_s = row(jnp.take_along_axis(h, tok_s[..., None], axis=1),
+              None, None)                                      # (B, S*k, D)
+    # vmapped scatter => batched scatter HLO: partitions on the batch dim
+    # (explicit arange(B) row indices would force a global gather).
+    buf = jax.vmap(lambda s, u: jnp.zeros((E * C + 1, D), x.dtype)
+                   .at[s].set(u))(slot, h_s)
+    buf = row(buf, None, None)
+    eb = ctx.constrain(buf[:, :-1].reshape(B, E, C, D),
+                       "batch", None, None, None)
+
+    # ---- expert FFN (batched swiglu, TP on d_ff) ------------------------
+    g = jnp.einsum("becd,edf->becf", eb, p["we_g"], preferred_element_type=F32)
+    u = jnp.einsum("becd,edf->becf", eb, p["we_u"], preferred_element_type=F32)
+    a = ctx.constrain((jax.nn.silu(g) * u).astype(x.dtype),
+                      "batch", None, None, "model")
+    o = jnp.einsum("becf,efd->becd", a, p["we_d"], preferred_element_type=F32)
+    o = ctx.constrain(o, "batch", None, None, None).reshape(B, E * C, D)
+
+    # ---- combine ---------------------------------------------------------
+    o_s = row(jnp.take_along_axis(o, jnp.clip(slot, 0, E * C - 1)[..., None],
+                                  axis=1), None, None)
+    contrib = row(o_s * jnp.where(keep, w_s, 0.0)[..., None], None, None)
+    y = jax.vmap(lambda t, c: jnp.zeros((S, D), F32).at[t].add(c))(
+        tok_s, contrib)
+    y = ctx.constrain(y, "batch", None, None)
+
+    if cfg.n_shared_experts:
+        sg = jax.nn.silu((h @ p["ws_g"]).astype(F32))
+        su = (h @ p["ws_u"]).astype(F32)
+        y = y + jnp.einsum("bsf,fd->bsd", (sg * su).astype(x.dtype),
+                           p["ws_d"], preferred_element_type=F32)
+
+    return y.astype(x.dtype), aux

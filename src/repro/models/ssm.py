@@ -1,0 +1,309 @@
+"""Recurrent blocks: Mamba (selective SSM), mLSTM and sLSTM (xLSTM).
+
+All three expose the block contract used by lm.py::
+
+    *_params(cfg, key) -> param dict (one layer)
+    *_fwd(cfg, p, x, mode, cache, pos) -> (out, new_cache)
+
+Training/prefill use chunkwise-parallel forms (lax.scan over time chunks,
+associative/parallel math inside a chunk) so activation memory is
+O(chunk), not O(S); decode is the exact O(1)-state recurrence — this is
+what makes the `long_500k` shapes feasible for xlstm/jamba while
+full-attention archs must skip them.
+
+Simplifications vs. the reference CUDA implementations (documented in
+DESIGN.md §8): mLSTM/sLSTM blocks omit the learnable-skip/small-conv
+details that don't change cost structure; sLSTM uses a single
+block-diagonal recurrent matrix per head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+
+F32 = jnp.float32
+CHUNK = 128
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv. x: (B,S,Di), w: (K,Di), b: (Di,).
+
+    cache: (B, K-1, Di) trailing context (decode) or None (train: zero pad).
+    Returns (y, new_cache).
+    """
+    B, S, Di = x.shape
+    K = w.shape[0]
+    ctx = cache if cache is not None else jnp.zeros((B, K - 1, Di), x.dtype)
+    xp = jnp.concatenate([ctx, x], axis=1)          # (B, S+K-1, Di)
+    y = sum(xp[:, i:i + S] * w[i] for i in range(K)) + b
+    new_cache = xp[:, -(K - 1):] if K > 1 else ctx
+    return y.astype(x.dtype), new_cache
+
+
+# ------------------------------------------------------------------ Mamba
+def mamba_params(cfg, key):
+    D, Di, St = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    R, K = cfg.mamba_dt_rank, cfg.mamba_conv
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "norm": layers.norm_params(cfg, D),
+        "in_proj": jax.random.normal(ks[0], (D, 2 * Di), dt) * D ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (K, Di), dt) * K ** -0.5,
+        "conv_b": jnp.zeros((Di,), dt),
+        "x_proj": jax.random.normal(ks[2], (Di, R + 2 * St), dt) * Di ** -0.5,
+        "dt_w": jax.random.normal(ks[3], (R, Di), dt) * R ** -0.5,
+        "dt_b": jnp.full((Di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, St + 1, dtype=jnp.float32), (Di, St)).copy()),
+        "Dskip": jnp.ones((Di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (Di, D), dt) * Di ** -0.5,
+    }
+
+
+def _ssm_chunk_scan(dA, dBx, C, h0):
+    """Chunked diagonal SSM scan.
+
+    dA, dBx: (B, S, Di, St) f32; C: (B, S, St); h0: (B, Di, St).
+    h_t = dA_t * h_{t-1} + dBx_t ; y_t = sum_s h_t[., s] * C_t[s].
+    """
+    B, S, Di, St = dA.shape
+    chunk = min(CHUNK, S)
+    assert S % chunk == 0
+    n = S // chunk
+
+    def body(h, inp):
+        a, bx, c = inp                                # (B,chunk,Di,St) x2, (B,chunk,St)
+        def comb(e1, e2):
+            return e1[0] * e2[0], e2[0] * e1[1] + e2[1]
+        acc_a, acc_b = lax.associative_scan(comb, (a, bx), axis=1)
+        h_all = acc_a * h[:, None] + acc_b            # (B,chunk,Di,St)
+        y = jnp.einsum("bcds,bcs->bcd", h_all, c)
+        return h_all[:, -1], y
+
+    dAc = dA.reshape(B, n, chunk, Di, St).transpose(1, 0, 2, 3, 4)
+    dBc = dBx.reshape(B, n, chunk, Di, St).transpose(1, 0, 2, 3, 4)
+    Cc = C.reshape(B, n, chunk, St).transpose(1, 0, 2, 3)
+    h_final, ys = lax.scan(body, h0, (dAc, dBc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, Di)
+    return y, h_final
+
+
+def mamba_fwd(cfg, p, x, *, mode, cache=None, pos=0):
+    B, S, D = x.shape
+    Di, St, R = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_dt_rank
+    h = layers.apply_norm(cfg, p["norm"], x)
+    xz = h @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_cache = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xin, p["conv_w"], p["conv_b"], conv_cache)
+    xc = jax.nn.silu(xc.astype(F32)).astype(x.dtype)
+
+    proj = xc @ p["x_proj"]
+    dt_in, Bp, Cp = jnp.split(proj.astype(F32), [R, R + St], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_w"].astype(F32) + p["dt_b"])   # (B,S,Di)
+    A = -jnp.exp(p["A_log"])                                           # (Di,St)
+    dA = jnp.exp(dt[..., None] * A)                                    # (B,S,Di,St)
+    dBx = dt[..., None] * Bp[:, :, None, :] * xc.astype(F32)[..., None]
+
+    h0 = (cache["ssm"].astype(F32) if cache is not None
+          else jnp.zeros((B, Di, St), F32))
+    if mode == "decode":
+        h1 = dA[:, 0] * h0 + dBx[:, 0]
+        y = jnp.einsum("bds,bs->bd", h1, Cp[:, 0])[:, None]
+        h_final = h1
+    else:
+        y, h_final = _ssm_chunk_scan(dA, dBx, Cp, h0)
+
+    y = y + p["Dskip"] * xc.astype(F32)
+    y = y * jax.nn.silu(z.astype(F32))
+    out = (y.astype(x.dtype) @ p["out_proj"]).astype(x.dtype)
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"conv": new_conv, "ssm": h_final.astype(F32)}
+    return out, new_cache
+
+
+# ------------------------------------------------------------------ mLSTM
+def mlstm_params(cfg, key):
+    D, Di, H = cfg.d_model, cfg.lstm_d_inner, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "norm": layers.norm_params(cfg, D),
+        "in_proj": jax.random.normal(ks[0], (D, 2 * Di), dt) * D ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (4, Di), dt) * 0.5,
+        "conv_b": jnp.zeros((Di,), dt),
+        "wq": jax.random.normal(ks[2], (Di, Di), dt) * Di ** -0.5,
+        "wk": jax.random.normal(ks[3], (Di, Di), dt) * Di ** -0.5,
+        "wv": jax.random.normal(ks[4], (Di, Di), dt) * Di ** -0.5,
+        "wif": jax.random.normal(ks[5], (Di, 2 * H), dt) * Di ** -0.5,
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),   # forget-gate bias init
+        "out_norm": {"scale": jnp.ones((Di,), jnp.float32)},
+        "out_proj": jax.random.normal(ks[6], (Di, D), dt) * Di ** -0.5,
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, state):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B,c,H,dh) f32; li,lf: (B,c,H) log input / log-sigmoid forget
+    gates; state = (C (B,H,dh,dh), n (B,H,dh), m (B,H)) — C and n are
+    stored *stabilized*: true value = exp(m) * stored.
+    Returns (h (B,c,H,dh), new_state).
+    """
+    B, c, H, dh = q.shape
+    C0, n0, m0 = state
+    scale = dh ** -0.5
+    lf_cum = jnp.cumsum(lf, axis=1)                       # (B,c,H) inclusive
+    lf_tot = lf_cum[:, -1]
+
+    # intra-chunk log decay matrix: Dm[t,j] = lf_cum[t]-lf_cum[j]+li[j], j<=t
+    Dm = lf_cum[:, :, None] - lf_cum[:, None, :] + li[:, None]   # (B,t,j,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    Dm = jnp.where(tri[None, :, :, None], Dm, -jnp.inf)
+    m_intra = jnp.max(Dm, axis=2)                         # (B,c,H)
+    m_inter = lf_cum + m0[:, None]                        # (B,c,H)
+    m_t = jnp.maximum(m_intra, m_inter)
+
+    wexp = jnp.where(tri[None, :, :, None],
+                     jnp.exp(Dm - m_t[:, :, None]), 0.0)  # (B,t,j,H)
+    s = jnp.einsum("bthd,bjhd->btjh", q, k) * scale
+    w = s * wexp
+    dec = jnp.exp(m_inter - m_t)                          # (B,c,H) carry decay
+
+    num = (jnp.einsum("btjh,bjhd->bthd", w, v)
+           + jnp.einsum("bthd,bhde->bthe", q * scale, C0) * dec[..., None])
+    n_t = (jnp.einsum("btjh,bjhd->bthd", wexp, k)
+           + dec[..., None] * n0[:, None])
+    qn = jnp.einsum("bthd,bthd->bth", q * scale, n_t)
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+    h = num / denom[..., None]
+
+    # carry update (end of chunk), re-stabilized to m_next
+    g = lf_tot[:, None] - lf_cum + li                     # (B,j,H)
+    m_next = jnp.maximum(lf_tot + m0, jnp.max(g, axis=1))
+    wC = jnp.exp(g - m_next[:, None])                     # (B,j,H)
+    carry = jnp.exp(lf_tot + m0 - m_next)                 # (B,H)
+    C1 = (carry[:, :, None, None] * C0
+          + jnp.einsum("bjh,bjhd,bjhe->bhde", wC, k, v))
+    n1 = carry[..., None] * n0 + jnp.einsum("bjh,bjhd->bhd", wC, k)
+    return h, (C1, n1, m_next)
+
+
+def mlstm_fwd(cfg, p, x, *, mode, cache=None, pos=0):
+    B, S, D = x.shape
+    Di, H = cfg.lstm_d_inner, cfg.n_heads
+    dh = Di // H
+    h0 = layers.apply_norm(cfg, p["norm"], x)
+    up = h0 @ p["in_proj"]
+    u, gate = jnp.split(up, 2, axis=-1)
+    conv_cache = cache["conv"] if cache is not None else None
+    uc, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_cache)
+    uc = jax.nn.silu(uc.astype(F32)).astype(x.dtype)
+
+    q = (uc @ p["wq"]).reshape(B, S, H, dh).astype(F32)
+    k = (uc @ p["wk"]).reshape(B, S, H, dh).astype(F32)
+    v = (u @ p["wv"]).reshape(B, S, H, dh).astype(F32)
+    gif = (uc @ p["wif"]).astype(F32).reshape(B, S, 2, H)
+    li = gif[:, :, 0] + p["b_i"]                       # log-space input gate
+    lf = jax.nn.log_sigmoid(gif[:, :, 1] + p["b_f"])   # log forget gate
+
+    if cache is not None:
+        state = (cache["C"].astype(F32), cache["n"].astype(F32),
+                 cache["m"].astype(F32))
+    else:
+        state = (jnp.zeros((B, H, dh, dh), F32), jnp.zeros((B, H, dh), F32),
+                 jnp.full((B, H), -jnp.inf, F32))
+
+    chunk = min(CHUNK, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+
+    def body(st, inp):
+        qc, kc, vc, lic, lfc = inp
+        hc, st = _mlstm_chunk(qc, kc, vc, lic, lfc, st)
+        return st, hc
+
+    split = lambda a: a.reshape(B, n_chunks, chunk, *a.shape[2:]).transpose(
+        1, 0, 2, *range(3, a.ndim + 1))
+    state, hs = lax.scan(body, state, (split(q), split(k), split(v),
+                                       split(li), split(lf)))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, Di)
+
+    h = layers.rms_norm(h.astype(x.dtype), p["out_norm"]["scale"])
+    h = h * jax.nn.silu(gate.astype(F32)).astype(x.dtype)
+    out = (h @ p["out_proj"]).astype(x.dtype)
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        C1, n1, m1 = state
+        new_cache = {"conv": new_conv, "C": C1, "n": n1, "m": m1}
+    return out, new_cache
+
+
+# ------------------------------------------------------------------ sLSTM
+def slstm_params(cfg, key):
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    ks = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "norm": layers.norm_params(cfg, D),
+        "wx": jax.random.normal(ks[0], (D, 4 * D), dt) * D ** -0.5,
+        "rh": jax.random.normal(ks[1], (H, dh, 4 * dh), jnp.float32) * dh ** -0.5,
+        "b": jnp.concatenate([jnp.zeros((2 * D,)), jnp.full((D,), 3.0),
+                              jnp.zeros((D,))]).astype(jnp.float32),
+        "out_norm": {"scale": jnp.ones((D,), jnp.float32)},
+        "out_proj": jax.random.normal(ks[2], (D, D), dt) * D ** -0.5,
+    }
+
+
+def slstm_fwd(cfg, p, x, *, mode, cache=None, pos=0):
+    """Sequential sLSTM with exponential gating + stabilizer state.
+
+    Gate preacts = x W + h_{t-1} R (block-diagonal per head) + b.
+    Truly recurrent (h feeds back) -> lax.scan over every step.
+    """
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    xin = layers.apply_norm(cfg, p["norm"], x)
+    gx = (xin @ p["wx"]).astype(F32) + p["b"]            # (B,S,4D)
+    gx = gx.reshape(B, S, 4, H, dh)
+
+    if cache is not None:
+        st = (cache["c"].astype(F32), cache["n"].astype(F32),
+              cache["h"].astype(F32), cache["m"].astype(F32))
+    else:
+        z = jnp.zeros((B, H, dh), F32)
+        st = (z, z, z, jnp.full((B, H, dh), -jnp.inf, F32))
+
+    rh = p["rh"].astype(F32).reshape(H, dh, 4, dh)
+
+    def step(st, gxt):
+        c, n, h, m = st
+        gr = jnp.einsum("bhd,hdge->bghe", h, rh)          # (B,4,H,dh)
+        zt, it, ft, ot = [gxt[:, i] + gr[:, i] for i in range(4)]
+        m_new = jnp.maximum(ft + m, it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(ft + m - m_new)
+        zt = jnp.tanh(zt)
+        o_g = jax.nn.sigmoid(ot)
+        c = f_g * c + i_g * zt
+        n = f_g * n + i_g
+        h = o_g * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (c, n, h, m_new), h
+
+    st, hs = lax.scan(step, st, gx.transpose(1, 0, 2, 3, 4))  # scan over S
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    h = layers.rms_norm(h, p["out_norm"]["scale"])
+    out = (h @ p["out_proj"]).astype(x.dtype)
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        c, n, hh, m = st
+        new_cache = {"c": c, "n": n, "h": hh, "m": m}
+    return out, new_cache

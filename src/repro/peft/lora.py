@@ -1,0 +1,72 @@
+"""LoRA composed with ZO (paper Table 4: MeZO/LeZO (LoRA)).
+
+Trainable state is *only* the LoRA tree (A, B per target projection,
+stacked over layers exactly like the base weights), so the ZO machinery —
+including LeZO's layer groups — applies unchanged: ``zo.build_spec`` on
+the LoRA tree with the same group_fn.
+
+``merge`` produces effective weights W + (alpha/r) * A @ B.  For ZO this
+costs one small matmul per target per pass; no optimizer state exists
+either way (ZO stores nothing), so LoRA's benefit under ZO is *fewer
+perturbed dimensions* (lower SPSA variance), not memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAConfig:
+    rank: int = 8
+    alpha: int = 16
+    targets: Tuple[str, ...] = ("wq", "wv")   # leaf names inside block mix
+
+
+def _is_target(path_str: str, targets) -> bool:
+    leafname = path_str.rsplit("/", 1)[-1]
+    return path_str.startswith("stages/") and leafname in targets
+
+
+def init_lora(params, cfg: LoRAConfig, key) -> Dict[str, Any]:
+    """Build the LoRA tree mirroring targeted leaves of ``params``."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        ps = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if not _is_target(ps, cfg.targets) or leaf.ndim != 3:
+            continue  # (R, din, dout) stacked projections only
+        R, din, dout = leaf.shape
+        key, k1 = jax.random.split(key)
+        out[ps] = {
+            "A": jax.random.normal(k1, (R, din, cfg.rank), leaf.dtype) * din ** -0.5,
+            "B": jnp.zeros((R, cfg.rank, dout), leaf.dtype),
+        }
+    if not out:
+        raise ValueError(f"no LoRA targets matched {cfg.targets}")
+    return out
+
+
+def merge(params, lora: Dict[str, Any], cfg: LoRAConfig):
+    """Return params with W <- W + (alpha/rank) * A @ B for each target."""
+    scale = cfg.alpha / cfg.rank
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        ps = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if ps in lora:
+            ab = jnp.einsum("rik,rkj->rij", lora[ps]["A"], lora[ps]["B"])
+            leaf = leaf + (scale * ab).astype(leaf.dtype)
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def lora_group_fn(path: str):
+    """ZO layer-group labels for the LoRA tree: the dict key IS the base
+    path, so reuse its stage/block prefix ('stages/s0/b0/...')."""
+    if path.startswith("stages/"):
+        parts = path.split("/")
+        return f"{parts[1]}.{parts[2]}"
+    return None

@@ -1,0 +1,63 @@
+"""Prefix tuning composed with ZO (paper Table 4: MeZO/LeZO (prefix)).
+
+Trainable state: ``n_prefix`` learned key/value pairs per attention
+layer (stacked over layers).  They are *injected* into the base params as
+``pk``/``pv`` leaves, which ``layers.attn_fwd`` prepends as always-visible
+positions.  ZO perturbs only the prefix tree; LeZO's layer groups apply
+via the same stage/block paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixConfig:
+    n_prefix: int = 5
+    init_std: float = 0.02
+
+
+def init_prefix(cfg: ModelConfig, key, pcfg: PrefixConfig = PrefixConfig()
+                ) -> Dict[str, Any]:
+    """One (pk, pv) pair per attention block position, stacked over repeat."""
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    P = pcfg.n_prefix
+    out = {}
+    for si, st in enumerate(cfg.stages):
+        for bj, b in enumerate(st.pattern):
+            if b.kind != "attn":
+                continue
+            key, k1, k2 = jax.random.split(key, 3)
+            base = f"stages/s{si}/b{bj}/mix"
+            out[f"{base}/pk"] = jax.random.normal(
+                k1, (st.repeat, P, KV, dh), jnp.dtype(cfg.dtype)) * 0.02
+            out[f"{base}/pv"] = jax.random.normal(
+                k2, (st.repeat, P, KV, dh), jnp.dtype(cfg.dtype)) * 0.02
+    if not out:
+        raise ValueError("model has no attention blocks for prefix tuning")
+    return out
+
+
+def inject(params, prefix: Dict[str, Any]):
+    """Return params with pk/pv leaves grafted into the matching blocks."""
+    params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
+    for path, leaf in prefix.items():
+        parts = path.split("/")
+        node = params
+        for p in parts[:-1]:
+            node = node.setdefault(p, {}) if isinstance(node, dict) else node
+        node[parts[-1]] = leaf
+    return params
+
+
+def prefix_group_fn(path: str):
+    if path.startswith("stages/"):
+        parts = path.split("/")
+        return f"{parts[1]}.{parts[2]}"
+    return None

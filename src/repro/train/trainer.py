@@ -1,0 +1,202 @@
+"""Training driver: ZO (MeZO/LeZO) and FO (the paper's FT baseline).
+
+Handles: jit + buffer donation, eval/validation cadence, best-checkpoint
+selection on validation loss (the paper's protocol), resume-from-latest,
+and the loss-quorum straggler simulation (DESIGN.md §7): the global batch
+is split into ``n_loss_shards`` (stand-ins for data-parallel replica
+groups) and each SPSA forward averages only the shards that "arrived" —
+a deterministic per-step subset when ``quorum < 1``.  SPSA only needs *a*
+mini-batch loss, so stragglers cost variance, not correctness; the test
+suite checks convergence still holds at quorum=0.75.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fo, rng, zo, zo_adaptive
+from repro.data import synthetic
+from repro.models import frontends, lm
+from repro.peft import lora as lora_mod
+from repro.peft import prefix as prefix_mod
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 500
+    batch_size: int = 16
+    eval_every: int = 100
+    log_every: int = 50
+    seed: int = 0
+    mode: str = "zo"              # zo | zo_momentum | fo
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    keep_ckpts: int = 2
+    # straggler simulation
+    n_loss_shards: int = 1
+    quorum: float = 1.0
+    # peft
+    peft: Optional[str] = None    # None | lora | prefix
+
+
+class Trainer:
+    def __init__(self, model_cfg, task: synthetic.TaskConfig,
+                 tcfg: TrainConfig,
+                 zo_cfg: zo.ZOConfig = zo.ZOConfig(),
+                 fo_cfg: fo.FOConfig = fo.FOConfig(),
+                 lora_cfg: lora_mod.LoRAConfig = lora_mod.LoRAConfig(),
+                 prefix_cfg: prefix_mod.PrefixConfig = prefix_mod.PrefixConfig()):
+        self.mcfg, self.task, self.tcfg = model_cfg, task, tcfg
+        self.zo_cfg, self.fo_cfg = zo_cfg, fo_cfg
+        key = jax.random.PRNGKey(tcfg.seed)
+        self.base_params = lm.init_params(model_cfg, key)
+
+        # trainable tree + loss over it
+        if tcfg.peft == "lora":
+            self.trainable = lora_mod.init_lora(self.base_params, lora_cfg,
+                                                jax.random.fold_in(key, 1))
+            group_fn = lora_mod.lora_group_fn
+            self._to_model = lambda tr: lora_mod.merge(self.base_params, tr,
+                                                       lora_cfg)
+        elif tcfg.peft == "prefix":
+            self.trainable = prefix_mod.init_prefix(model_cfg,
+                                                    jax.random.fold_in(key, 2),
+                                                    prefix_cfg)
+            group_fn = prefix_mod.prefix_group_fn
+            self._to_model = lambda tr: prefix_mod.inject(self.base_params, tr)
+        else:
+            self.trainable = self.base_params
+            group_fn = lm.zo_group_fn
+            self._to_model = lambda tr: tr
+
+        self.spec = zo.build_spec(self.trainable, group_fn)
+        self._build_loss()
+        self._build_step()
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
+                     if tcfg.ckpt_dir else None)
+
+    # ------------------------------------------------------------- loss
+    def _build_loss(self):
+        mcfg, tcfg = self.mcfg, self.tcfg
+
+        def base_loss(trainable, batch):
+            return lm.lm_loss(mcfg, self._to_model(trainable), batch)
+
+        if tcfg.n_loss_shards <= 1 or tcfg.quorum >= 1.0:
+            self.loss_fn = base_loss
+            return
+
+        n_sh = tcfg.n_loss_shards
+        n_ok = max(1, int(round(tcfg.quorum * n_sh)))
+
+        def quorum_loss(trainable, batch):
+            # deterministic straggler subset per batch content
+            tag = jnp.sum(batch["labels"][:, -1]).astype(jnp.uint32)
+            bits = rng.mix32(jnp.arange(n_sh, dtype=jnp.uint32) * jnp.uint32(
+                0x9E3779B9) + rng.fold(tag, jnp.uint32(0xFA11)))
+            arrived = jnp.argsort(bits) < n_ok          # n_ok shards arrive
+            shards = jax.tree.map(
+                lambda x: x.reshape(n_sh, x.shape[0] // n_sh, *x.shape[1:]),
+                batch)
+            losses = jax.vmap(lambda b: base_loss(trainable, b))(shards)
+            w = arrived.astype(jnp.float32)
+            return jnp.sum(losses * w) / jnp.sum(w)
+
+        self.loss_fn = quorum_loss
+
+    # ------------------------------------------------------------- step
+    def _build_step(self):
+        if self.tcfg.mode == "zo":
+            step = zo.make_zo_step(self.loss_fn, self.spec, self.zo_cfg)
+            self._step = jax.jit(step, donate_argnums=0)
+            self.fo_state = None
+        elif self.tcfg.mode == "zo_momentum":
+            mcfg = zo_adaptive.ZOMomentumConfig(
+                eps=self.zo_cfg.eps, lr=self.zo_cfg.lr,
+                n_drop=self.zo_cfg.n_drop, backend=self.zo_cfg.backend)
+            step, init = zo_adaptive.make_zo_momentum_step(
+                self.loss_fn, self.spec, mcfg)
+            self._mom_step = jax.jit(step, donate_argnums=(0, 1))
+            self.mom_state = init()
+            self._step = None
+            self.fo_state = None
+        else:
+            step = fo.make_fo_step(self.loss_fn, self.fo_cfg)
+            self._step = jax.jit(step, donate_argnums=(0, 1))
+            self.fo_state = fo.init_state(self.trainable, self.fo_cfg)
+        self._eval_loss = jax.jit(self.loss_fn)
+
+    # ------------------------------------------------------------ train
+    def train(self, train_data=None, val_data=None) -> Dict[str, Any]:
+        tcfg, task = self.tcfg, self.task
+        if train_data is None:
+            train_data = synthetic.make_dataset(task, 4096)
+        if val_data is None:
+            val_data = synthetic.make_dataset(
+                dataclasses.replace(task, seed=task.seed + 1), 512)
+        base_seed = np.uint32(rng.fold_py(tcfg.seed, 0xC0FFEE))
+
+        start = 0
+        params = self.trainable
+        if self.ckpt and self.ckpt.latest() is not None:
+            params, start, _, _ = self.ckpt.restore(params)
+            params = jax.tree.map(jnp.asarray, params)
+
+        history = {"step": [], "loss": [], "val_loss": [], "val_step": [],
+                   "val_acc": [], "wall": []}
+        best = (np.inf, None, -1)
+        t0 = time.perf_counter()
+        stream = synthetic.batches(train_data, tcfg.batch_size, tcfg.steps,
+                                   seed=tcfg.seed + 7)
+        for t, np_batch in enumerate(stream):
+            if t < start:
+                continue
+            batch = {k: jnp.asarray(v) for k, v in np_batch.items()
+                     if k != "class_labels"}
+            if self.tcfg.mode == "zo":
+                params, metrics = self._step(params, batch, jnp.int32(t),
+                                             base_seed)
+            elif self.tcfg.mode == "zo_momentum":
+                params, self.mom_state, metrics = self._mom_step(
+                    params, self.mom_state, batch, jnp.int32(t), base_seed)
+            else:
+                params, self.fo_state, metrics = self._step(
+                    params, self.fo_state, batch, jnp.int32(t))
+            if tcfg.log_every and t % tcfg.log_every == 0:
+                history["step"].append(t)
+                history["loss"].append(float(metrics["loss"]))
+                history["wall"].append(time.perf_counter() - t0)
+            if tcfg.eval_every and (t + 1) % tcfg.eval_every == 0:
+                vl, va = self.evaluate(params, val_data)
+                history["val_step"].append(t + 1)
+                history["val_loss"].append(vl)
+                history["val_acc"].append(va)
+                if vl < best[0]:
+                    best = (vl, jax.tree.map(np.asarray, params), t + 1)
+            if self.ckpt and tcfg.ckpt_every and (t + 1) % tcfg.ckpt_every == 0:
+                self.ckpt.save(t + 1, params, int(base_seed), blocking=False)
+        if self.ckpt:
+            self.ckpt.wait()
+        history["final_params"] = params
+        if best[1] is not None:
+            history["best_params"] = best[1]
+            history["best_step"] = best[2]
+        return history
+
+    def evaluate(self, params, val_data, max_examples=256):
+        n = min(max_examples, val_data["tokens"].shape[0])
+        batch = {k: jnp.asarray(v[:n]) for k, v in val_data.items()
+                 if k != "class_labels"}
+        vl = float(self._eval_loss(params, batch))
+        va = -1.0
+        if self.task.kind in ("classification", "multiple_choice"):
+            va = synthetic.classification_accuracy(
+                self.mcfg, self._to_model(params), val_data, self.task, lm,
+                max_examples=n)
+        return vl, va

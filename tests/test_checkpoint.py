@@ -1,0 +1,61 @@
+"""Checkpoint manager: roundtrip, keep-k GC, resume determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree():
+    return {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(5, t, base_seed=42, extra={"note": "x"})
+    params, step, seed, extra = mgr.restore(t)
+    assert step == 5 and seed == 42 and extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(t)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(), base_seed=0)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest() == 4
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(7, _tree(), base_seed=1, blocking=False)
+    mgr.wait()
+    assert mgr.latest() == 7
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(), base_seed=0)
+    bad = {"a": jnp.zeros((3, 3)), "b": {"c": jnp.ones((4,), jnp.int32)}}
+    with pytest.raises(ValueError):
+        mgr.restore(bad)
+
+
+def test_missing_leaf_rejected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": jnp.zeros((2, 3))}, base_seed=0)
+    with pytest.raises(KeyError):
+        mgr.restore(_tree())
+
+
+def test_no_partial_checkpoint_on_disk(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(9, _tree(), base_seed=0)
+    names = os.listdir(tmp_path)
+    assert all(n.startswith("step_") for n in names), names

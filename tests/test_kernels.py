@@ -1,0 +1,64 @@
+"""Kernel backends vs the pure-jnp oracle: shape/dtype sweeps + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.zo_axpy import zo_axpy_2d
+
+
+@pytest.mark.parametrize("L,shape", [(1, (7,)), (3, (16,)), (4, (8, 8)),
+                                     (6, (5, 3, 4)), (2, (1000,)),
+                                     (5, (129,)), (2, (257, 3))])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("backend", ["scan", "gather", "pallas"])
+def test_backend_matches_dense(L, shape, dtype, backend):
+    k = jax.random.PRNGKey(0)
+    theta = jax.random.normal(k, (L,) + shape, jnp.dtype(dtype))
+    mask = jnp.asarray(np.random.default_rng(L).random(L) > 0.4)
+    if not bool(mask.any()):
+        mask = mask.at[0].set(True)
+    aidx = jnp.nonzero(mask)[0].astype(jnp.int32)
+    want = ops.zo_axpy(theta, path="w", seed=jnp.uint32(3), scale=0.05,
+                       decay=0.99, mask=mask, backend="dense")
+    got = ops.zo_axpy(theta, path="w", seed=jnp.uint32(3), scale=0.05,
+                      decay=0.99, mask=mask, active_idx=aidx, backend=backend)
+    tol = 1e-6 if dtype == "float32" else 1e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+    # dropped rows untouched in every backend
+    drop = ~np.asarray(mask)
+    assert np.array_equal(np.asarray(got)[drop], np.asarray(theta)[drop])
+
+
+@pytest.mark.parametrize("n", [64, 100, 65536, 65537])
+def test_pallas_tile_boundaries(n):
+    theta = jnp.arange(2 * n, dtype=jnp.float32).reshape(2, n)
+    mask = jnp.asarray([True, False])
+    got = zo_axpy_2d(theta, mask, jnp.uint32(1), jnp.float32(0.1),
+                     jnp.float32(1.0))
+    want = ref.zo_axpy_2d(theta, mask, jnp.uint32(1), 0.1, 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_unstacked_leaf():
+    theta = jnp.ones((13, 7))
+    out = ops.zo_axpy(theta, path="embed", seed=jnp.uint32(2), scale=0.1)
+    assert out.shape == theta.shape
+    assert not np.allclose(np.asarray(out), 1.0)
+
+
+@given(st.integers(0, 2**31), st.floats(-0.1, 0.1), st.floats(0.9, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_axpy_linear_property(seed, scale, decay):
+    """out == decay*theta + scale*z exactly (oracle linearity)."""
+    theta = jnp.ones((3, 50))
+    mask = jnp.asarray([True, True, False])
+    out = np.asarray(ref.zo_axpy_2d(theta, mask, jnp.uint32(seed), scale,
+                                    decay))
+    z = np.asarray(ref.leaf_normal(jnp.uint32(seed), 3, 50))
+    want = decay * 1.0 + scale * z
+    want[2] = 1.0
+    np.testing.assert_allclose(out, want.astype(np.float32), atol=1e-6)

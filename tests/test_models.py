@@ -1,0 +1,182 @@
+"""Model substrate correctness: attention oracle, cache consistency,
+chunked-vs-sequential recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers, lm, ssm
+from repro.models.config import BlockCfg, ModelConfig, StageCfg, dense_lm
+
+F32 = jnp.float32
+
+
+def naive_attention(q, k, v, causal=True):
+    B, S, KV, G, dh = q.shape
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k) * dh ** -0.5
+    if causal:
+        m = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+
+
+@pytest.mark.parametrize("S,qc,kc", [(64, 16, 16), (64, 64, 8), (96, 32, 32)])
+def test_flash_matches_naive(S, qc, kc):
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (2, S, 2, 3, 8), F32)
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (2, S, 2, 8), F32)
+    v = jax.random.normal(jax.random.fold_in(k, 2), (2, S, 2, 8), F32)
+    got = layers.flash_attention(q, kk, v, q_chunk=qc, k_chunk=kc)
+    want = naive_attention(q, kk, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_key_padding_with_prefix_offset():
+    """k_offset<0 (prefix tokens) + non-divisible Sk exercises padding."""
+    k = jax.random.PRNGKey(1)
+    S, P = 32, 5
+    q = jax.random.normal(k, (1, S, 1, 2, 8), F32)
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (1, S + P, 1, 8), F32)
+    v = jax.random.normal(jax.random.fold_in(k, 2), (1, S + P, 1, 8), F32)
+    got = layers.flash_attention(q, kk, v, k_offset=-P, q_chunk=16, k_chunk=16)
+    # oracle: prefix rows always visible
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, kk) * 8 ** -0.5
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S + P)[None, :] - P
+    mask = qpos >= kpos
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    want = jnp.einsum("bkgqs,bskd->bqkgd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def _decode_check(cfg, S=16, tol=5e-5):
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab, (2, S)), jnp.int32)
+    h, _, _ = lm.forward(cfg, params, toks, mode="train")
+    want = lm.logits_fn(cfg, params, h[:, -1])
+    _, caches = lm.prefill(cfg, params, toks[:, :S - 1], max_seq=S + 2)
+    got, _ = lm.serve_step(cfg, params, caches, toks[:, S - 1:S],
+                           jnp.int32(S - 1))
+    scale = float(jnp.abs(want).max())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol * max(scale, 1.0))
+
+
+def test_decode_consistency_dense():
+    _decode_check(dense_lm("d", 2, 64, 4, 2, 128, 256, qk_norm=True,
+                           dtype="float32", max_seq=64))
+
+
+def test_decode_consistency_mla():
+    _decode_check(ModelConfig(
+        name="m", d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=256,
+        stages=(StageCfg(2, (BlockCfg("mla", "dense"),)),), kv_lora=32,
+        rope_head_dim=8, d_head=16, dtype="float32", max_seq=64))
+
+
+def test_decode_consistency_mamba():
+    _decode_check(ModelConfig(
+        name="mm", d_model=64, n_heads=4, n_kv_heads=4, d_ff=0, vocab=256,
+        stages=(StageCfg(2, (BlockCfg("mamba", "none"),)),),
+        dtype="float32", max_seq=64))
+
+
+def test_decode_consistency_xlstm():
+    _decode_check(ModelConfig(
+        name="x", d_model=64, n_heads=4, n_kv_heads=4, d_ff=0, vocab=256,
+        stages=(StageCfg(2, (BlockCfg("mlstm", "none"),
+                             BlockCfg("slstm", "none"))),),
+        dtype="float32", max_seq=64))
+
+
+def test_decode_consistency_moe_dropless():
+    # capacity_factor high enough that no token ever drops
+    _decode_check(ModelConfig(
+        name="moe", d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+        stages=(StageCfg(2, (BlockCfg("attn", "moe"),)),), n_experts=4,
+        top_k=2, moe_d_ff=32, capacity_factor=4.0, dtype="float32",
+        max_seq=64))
+
+
+def test_multi_step_decode_matches_train():
+    cfg = dense_lm("d", 2, 64, 4, 2, 128, 256, dtype="float32", max_seq=64)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    S = 12
+    toks = jnp.asarray(np.random.default_rng(1).integers(0, 256, (1, S)),
+                       jnp.int32)
+    h, _, _ = lm.forward(cfg, params, toks, mode="train")
+    _, caches = lm.prefill(cfg, params, toks[:, :4], max_seq=S + 2)
+    for t in range(4, S):
+        got, caches = lm.serve_step(cfg, params, caches, toks[:, t:t + 1],
+                                    jnp.int32(t))
+        want = lm.logits_fn(cfg, params, h[:, t])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4)
+
+
+def test_mamba_chunk_invariance():
+    """Chunked scan result independent of chunk size."""
+    B, S, Di, St = 2, 64, 8, 4
+    k = jax.random.PRNGKey(0)
+    dA = jax.nn.sigmoid(jax.random.normal(k, (B, S, Di, St)))
+    dBx = jax.random.normal(jax.random.fold_in(k, 1), (B, S, Di, St))
+    C = jax.random.normal(jax.random.fold_in(k, 2), (B, S, St))
+    h0 = jnp.zeros((B, Di, St))
+    outs = []
+    for chunk in (8, 64):
+        ssm.CHUNK, old = chunk, ssm.CHUNK
+        y, hf = ssm._ssm_chunk_scan(dA, dBx, C, h0)
+        ssm.CHUNK = old
+        outs.append((y, hf))
+    np.testing.assert_allclose(np.asarray(outs[0][0]), np.asarray(outs[1][0]),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs[0][1]), np.asarray(outs[1][1]),
+                               atol=1e-5)
+
+
+def test_mlstm_chunk_invariance():
+    """Chunkwise mLSTM == step-by-step recurrence (chunk=1 vs chunk=32)."""
+    B, S, H, dh = 1, 64, 2, 8
+    k = jax.random.PRNGKey(3)
+    q = jax.random.normal(k, (B, S, H, dh))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (B, S, H, dh))
+    v = jax.random.normal(jax.random.fold_in(k, 2), (B, S, H, dh))
+    li = jax.random.normal(jax.random.fold_in(k, 3), (B, S, H))
+    lf = jax.nn.log_sigmoid(jax.random.normal(jax.random.fold_in(k, 4),
+                                              (B, S, H)) + 2.0)
+    state = (jnp.zeros((B, H, dh, dh)), jnp.zeros((B, H, dh)),
+             jnp.full((B, H), -jnp.inf))
+
+    def run(chunk):
+        st = state
+        hs = []
+        for i in range(0, S, chunk):
+            h, st = ssm._mlstm_chunk(q[:, i:i + chunk], kk[:, i:i + chunk],
+                                     v[:, i:i + chunk], li[:, i:i + chunk],
+                                     lf[:, i:i + chunk], st)
+            hs.append(h)
+        return jnp.concatenate(hs, 1), st
+
+    h1, st1 = run(1)
+    h32, st32 = run(32)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h32), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st1[0]), np.asarray(st32[0]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_ce_matches_dense():
+    cfg = dense_lm("d", 1, 32, 2, 2, 64, 128, dtype="float32", max_seq=64)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 64
+    h = jax.random.normal(jax.random.PRNGKey(1), (B, S, 32))
+    y = jnp.asarray(np.random.default_rng(0).integers(0, 128, (B, S)))
+    m = jnp.asarray(np.random.default_rng(1).random((B, S)) > 0.5, F32)
+    got = lm.chunked_ce(cfg, params, h, y, m)
+    lg = lm.logits_fn(cfg, params, h)
+    lse = jax.nn.logsumexp(lg, -1)
+    gold = jnp.take_along_axis(lg, y[..., None], -1)[..., 0]
+    want = jnp.sum((lse - gold) * m) / jnp.sum(m)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
