@@ -1,0 +1,23 @@
+# One memorable entry point per CI stage.
+#   make test        - tier-1 suite (the ROADMAP.md verify command)
+#   make bench-smoke - fast estimator-sweep benchmark on CPU interpret mode
+#   make lint        - bytecode-compile everything (+ ruff when installed)
+
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test bench-smoke lint
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) benchmarks/estimator_sweep.py --smoke
+
+lint:
+	$(PY) -m compileall -q src tests benchmarks examples
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tests benchmarks examples; \
+	else \
+		echo "lint: compileall passed (ruff not installed)"; \
+	fi

@@ -13,12 +13,12 @@ sys.path.insert(0, str(Path(__file__).parent.parent))
 
 
 def main() -> None:
-    from benchmarks import (accuracy, peft, roofline, sparsity_sweep,
-                            speedup, stage_breakdown, token_length,
-                            zo_momentum)
+    from benchmarks import (accuracy, estimator_sweep, peft, roofline,
+                            sparsity_sweep, speedup, stage_breakdown,
+                            token_length, zo_momentum)
     print("name,us_per_call,derived")
     for mod in (stage_breakdown, speedup, sparsity_sweep, token_length,
-                accuracy, peft, zo_momentum, roofline):
+                accuracy, peft, zo_momentum, estimator_sweep, roofline):
         print(f"# --- {mod.__name__} ---")
         mod.run()
 

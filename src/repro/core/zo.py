@@ -20,6 +20,13 @@ under data parallelism the only cross-replica values are the two scalar
 losses.  ``fused_update=False`` gives the paper-faithful separate
 restore + update passes.
 
+Since the estimator refactor (DESIGN.md §6) this module owns the ZOSpec
+/ selection / axpy plumbing while the gradient estimate itself lives in
+``repro.estimators`` — :func:`make_zo_step` is a compatibility shim over
+the ``two_point`` estimator, and FZOO-style batched one-sided, averaged
+multi-direction, and importance-weighted estimators are one config away
+(``estimators.make_step``).
+
 Layer selection
 ---------------
 ``policy="uniform"`` is the paper's policy: drop n_drop of the N global
@@ -68,6 +75,11 @@ class ZOSpec:
 
     def quotas(self, n_drop: int) -> Dict[str, int]:
         """Largest-remainder apportionment of n_drop over groups."""
+        if self.num_layers == 0:
+            # No stacked groups (e.g. a flat toy tree): nothing to drop.
+            if n_drop:
+                raise ValueError("n_drop > 0 but the spec has no layer groups")
+            return {}
         if not 0 <= n_drop < self.num_layers:
             raise ValueError(f"n_drop must be in [0, {self.num_layers})")
         exact = {g: n_drop * L / self.num_layers
@@ -106,6 +118,18 @@ def build_spec(params, group_fn: Callable[[str], Optional[str]]) -> ZOSpec:
 
 
 # ----------------------------------------------------------- selection
+def _group_rank_bits(seed, salt: str, g: str, L: int):
+    """Seeded per-layer ranking bits for group ``g`` — the one hashing
+    scheme shared by the uniform and weighted stratified policies."""
+    gseed = rng.fold(seed, jnp.uint32(rng.leaf_uid(salt + g)))
+    ids = jnp.arange(L, dtype=jnp.uint32)
+    return rng.mix32(ids * jnp.uint32(0x9E3779B9) + gseed)
+
+
+def _mask_from_active(act, L: int):
+    return jnp.zeros((L,), jnp.bool_).at[act].set(True)
+
+
 def stratified_select(spec: ZOSpec, seed, n_drop: int):
     """Per-group masks + static-size active index vectors.
 
@@ -117,14 +141,43 @@ def stratified_select(spec: ZOSpec, seed, n_drop: int):
     n_active = 0
     for g, (start, L) in spec.slices.items():
         q = quotas[g]
-        gseed = rng.fold(seed, jnp.uint32(rng.leaf_uid("sel/" + g)))
-        ids = jnp.arange(L, dtype=jnp.uint32)
-        bits = rng.mix32(ids * jnp.uint32(0x9E3779B9) + gseed)
+        bits = _group_rank_bits(seed, "sel/", g, L)
         order = jnp.argsort(bits)
         act = jnp.sort(order[q:]).astype(jnp.int32)      # active, ascending
-        masks[g] = jnp.zeros((L,), jnp.bool_).at[act].set(True)
+        masks[g] = _mask_from_active(act, L)
         idxs[g] = act
         n_active += L - q
+    return masks, idxs, n_active
+
+
+def stratified_select_weighted(spec: ZOSpec, seed, n_drop: int, weights):
+    """Importance-weighted LeZO selection with static per-group quotas.
+
+    ``weights`` (num_layers,) >= 0, globally indexed like ZOSpec.slices.
+    Gumbel top-k by log-weight within each group: heavier layers are kept
+    more often, selection stays fully stochastic (every layer has nonzero
+    keep probability), and the per-group active count is the same static
+    ``L_g - quota_g`` as :func:`stratified_select`, so the gather
+    backend's compact buffers keep their shapes.  Uniform weights recover
+    the unweighted distribution.
+    """
+    quotas = spec.quotas(n_drop)
+    masks, idxs = {}, {}
+    n_active = 0
+    for g, (start, L) in spec.slices.items():
+        k = L - quotas[g]
+        w = jax.lax.dynamic_slice(jnp.asarray(weights, jnp.float32),
+                                  (start,), (L,))
+        bits = _group_rank_bits(seed, "wsel/", g, L)
+        u = jnp.clip((bits >> jnp.uint32(8)).astype(jnp.float32)
+                     / jnp.float32(1 << 24), 1e-7, 1.0 - 1e-7)
+        gumbel = -jnp.log(-jnp.log(u))
+        score = jnp.log(jnp.clip(w, 1e-9, None)) + gumbel
+        order = jnp.argsort(-score)
+        act = jnp.sort(order[:k]).astype(jnp.int32)      # active, ascending
+        masks[g] = _mask_from_active(act, L)
+        idxs[g] = act
+        n_active += k
     return masks, idxs, n_active
 
 
@@ -166,40 +219,24 @@ def make_zo_step(loss_fn: Callable, spec: ZOSpec, cfg: ZOConfig,
                  lr_schedule: Optional[Callable] = None):
     """Build the jit-able ZO step: step(params, batch, step_idx, base_seed)
     -> (params, metrics).  ``loss_fn(params, batch) -> scalar`` must
-    average over the (possibly sharded) batch.  Donate params at jit time."""
+    average over the (possibly sharded) batch.  Donate params at jit time.
+
+    Since the estimator refactor this is a thin shim over the two-point
+    estimator in ``repro.estimators`` — the probe/update op sequence (and
+    therefore every result bit) is unchanged from the original inline
+    implementation; tests/test_estimators.py holds the line.  Callers who
+    want a different estimator (one_sided, averaged, importance) use
+    ``estimators.make_step`` directly, which also threads estimator state.
+    """
     if cfg.backend == "gather" and cfg.policy != "stratified":
         raise ValueError("gather backend requires the stratified policy")
-    sched = lr_schedule or (lambda t: cfg.lr)
+    from repro import estimators  # local import: estimators builds on zo
+
+    ecfg = estimators.from_zo(cfg)
+    estep, _ = estimators.make_step(loss_fn, spec, ecfg, lr_schedule)
 
     def step(params, batch, step_idx, base_seed):
-        seed = rng.fold(jnp.asarray(base_seed, jnp.uint32),
-                        jnp.asarray(step_idx, jnp.uint32))
-        if cfg.policy == "stratified":
-            masks, idxs, n_active = stratified_select(spec, seed, cfg.n_drop)
-        else:
-            masks, idxs, n_active = uniform_select(spec, seed, cfg.n_drop)
-        ax = lambda p, s, d=1.0: tree_axpy(
-            p, spec, seed, s, masks, idxs, decay=d,
-            backend=cfg.backend, interpret=cfg.interpret)
-
-        p = ax(params, cfg.eps)
-        l_plus = loss_fn(p, batch)
-        p = ax(p, -2.0 * cfg.eps)
-        l_minus = loss_fn(p, batch)
-        g = (l_plus - l_minus) / (2.0 * cfg.eps)
-        lr = sched(step_idx)
-        decay = 1.0 - lr * cfg.weight_decay
-        if cfg.fused_update:
-            p = ax(p, cfg.eps - lr * g, decay)
-        else:  # paper-faithful two passes
-            p = ax(p, cfg.eps)               # restore
-            p = ax(p, -lr * g, decay)        # ZO-SGD update
-        metrics = {
-            "loss": 0.5 * (l_plus + l_minus),
-            "projected_grad": g,
-            "lr": lr,
-            "active_layers": jnp.asarray(n_active, jnp.int32),
-        }
+        p, _state, metrics = estep(params, {}, batch, step_idx, base_seed)
         return p, metrics
 
     return step

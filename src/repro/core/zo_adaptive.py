@@ -53,21 +53,22 @@ def make_zo_momentum_step(loss_fn: Callable, spec: zo.ZOSpec,
                           lr_schedule: Optional[Callable] = None):
     """State = (params, g_history (K,) f32, v_scalar) — O(K) extra bytes.
 
-    Each step: SPSA estimate as usual, push g_t into the ring, then apply
-    the momentum-weighted sum of the last K directions, regenerating each
-    z_{t-j} (and its layer subset) from (base_seed, t-j).
+    Each step: SPSA estimate through the estimator subsystem (a two-point
+    :class:`~repro.estimators.TwoPointSPSA` probe, restored immediately),
+    push g_t into the ring, then apply the momentum-weighted sum of the
+    last K directions, regenerating each z_{t-j} (and its layer subset)
+    from (base_seed, t-j) — the same regenerate-from-seed trick the
+    estimator DirectionSets are built on.
     """
+    from repro import estimators  # local import: estimators builds on zo
+
     sched = lr_schedule or (lambda t: cfg.lr)
     K = cfg.history
-
-    def select(seed):
-        if cfg.n_drop:
-            return zo.stratified_select(spec, seed, cfg.n_drop)
-        masks = {g: jnp.ones((l,), jnp.bool_)
-                 for g, (_, l) in spec.slices.items()}
-        idxs = {g: jnp.arange(l, dtype=jnp.int32)
-                for g, (_, l) in spec.slices.items()}
-        return masks, idxs, spec.num_layers
+    est = estimators.build_estimator(
+        spec, estimators.EstimatorConfig(
+            name="two_point", eps=cfg.eps, lr=cfg.lr, n_drop=cfg.n_drop,
+            policy="stratified", backend=cfg.backend, fused_update=False,
+            interpret=cfg.interpret))
 
     def init_state():
         return {"g_hist": jnp.zeros((K,), jnp.float32),
@@ -77,18 +78,14 @@ def make_zo_momentum_step(loss_fn: Callable, spec: zo.ZOSpec,
     def step(params, state, batch, step_idx, base_seed):
         seed = rng.fold(jnp.asarray(base_seed, jnp.uint32),
                         jnp.asarray(step_idx, jnp.uint32))
-        masks, idxs, _ = select(seed)
         ax = lambda p, s, sd, m, i: zo.tree_axpy(
             p, spec, sd, s, m, i, backend=cfg.backend,
             interpret=cfg.interpret)
 
-        # SPSA
-        p = ax(params, cfg.eps, seed, masks, idxs)
-        l_plus = loss_fn(p, batch)
-        p = ax(p, -2.0 * cfg.eps, seed, masks, idxs)
-        l_minus = loss_fn(p, batch)
-        g = (l_plus - l_minus) / (2.0 * cfg.eps)
-        p = ax(p, cfg.eps, seed, masks, idxs)            # restore
+        # SPSA probe + immediate restore (unfused: momentum owns the update)
+        p, dirs, em = est.estimate(loss_fn, params, batch, seed, state)
+        p = est.restore_probe(p, dirs)
+        g = dirs.coeffs[0]
 
         g_hist = jnp.roll(state["g_hist"], 1).at[0].set(g)
         count = state["count"] + 1
@@ -104,15 +101,14 @@ def make_zo_momentum_step(loss_fn: Callable, spec: zo.ZOSpec,
             t_j = step_idx - j
             seed_j = rng.fold(jnp.asarray(base_seed, jnp.uint32),
                               jnp.asarray(t_j, jnp.uint32))
-            masks_j, idxs_j, _ = select(seed_j)
+            masks_j, idxs_j, _ = est.select(seed_j, state)
             scale = -lr * (cfg.beta ** j.astype(jnp.float32)) * g_hist[j]
             valid = (t_j >= 0).astype(jnp.float32)
             return ax(p, scale * valid, seed_j, masks_j, idxs_j)
 
         p = jax.lax.fori_loop(0, K, apply_j, p)
         new_state = {"g_hist": g_hist, "v": v, "count": count}
-        metrics = {"loss": 0.5 * (l_plus + l_minus), "projected_grad": g,
-                   "lr": lr}
+        metrics = {"loss": em["loss"], "projected_grad": g, "lr": lr}
         return p, new_state, metrics
 
     return step, init_state

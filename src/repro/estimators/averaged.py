@@ -1,0 +1,54 @@
+"""q independent antithetic SPSA pairs, averaged for variance reduction.
+
+    ghat = (1/q) * sum_i g_i * z_i,   g_i = (L(+eps z_i) - L(-eps z_i)) / 2eps
+
+Each probe perturbs, evaluates the pair, and restores before the next
+direction, so a single parameter buffer is reused throughout; the update
+then replays the q directions as q fused axpy passes, regenerating each
+z_i from its seed (the ``zo_adaptive`` trick) — state stays q scalars.
+
+At q=1 this is exactly two-point SPSA with an unfused restore, and
+matches :class:`TwoPointSPSA` to float rounding (asserted in
+tests/test_estimators.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.estimators.base import DirectionSet, Estimator, direction_seeds
+
+
+class AveragedSPSA(Estimator):
+    name = "averaged"
+
+    def estimate(self, loss_fn, params, batch, seed, state):
+        cfg = self.cfg
+        q = cfg.q
+        seeds = direction_seeds(seed, q)
+        p = params
+        coeffs, masks, idxs = [], [], []
+        loss_acc = g_acc = 0.0
+        n_active = None
+        for s in seeds:
+            m, ix, na = self.select(s, state)
+            n_active = na if n_active is None else n_active
+            p = self._ax(p, cfg.eps, s, m, ix)
+            l_plus = loss_fn(p, batch)
+            p = self._ax(p, -2.0 * cfg.eps, s, m, ix)
+            l_minus = loss_fn(p, batch)
+            p = self._ax(p, cfg.eps, s, m, ix)    # restore before next probe
+            g = (l_plus - l_minus) / (2.0 * cfg.eps)
+            coeffs.append(g / q)
+            masks.append(m)
+            idxs.append(ix)
+            loss_acc = loss_acc + 0.5 * (l_plus + l_minus)
+            g_acc = g_acc + g
+        dirs = DirectionSet(seeds=seeds, coeffs=tuple(coeffs),
+                            restore=(0.0,) * q, masks=tuple(masks),
+                            idxs=tuple(idxs))
+        metrics = {
+            "loss": loss_acc / q,
+            "projected_grad": g_acc / q,
+            "active_layers": jnp.asarray(n_active, jnp.int32),
+        }
+        return p, dirs, metrics

@@ -38,10 +38,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, nk, causal, kv_repeat):
 
     def body(ki, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(ki * bk, bk), slice(None))
-                    ).astype(F32)                  # (BK, dh)
-        v = pl.load(v_ref, (0, pl.dslice(ki * bk, bk), slice(None))
-                    ).astype(F32)
+        # unit slice (not int 0) on the leading axis: interpret-mode
+        # discharge in current jax chokes on mixed int+Slice indexers
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(ki * bk, bk),
+                            slice(None)))[0].astype(F32)   # (BK, dh)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(ki * bk, bk),
+                            slice(None)))[0].astype(F32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=F32) * scale
         if causal:

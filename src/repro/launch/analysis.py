@@ -320,3 +320,46 @@ def analyze(hlo_text: str) -> Dict:
     cost = HloCost(hlo_text).total()
     return {"flops": cost.flops, "bytes": cost.bytes,
             "collectives": cost.coll}
+
+
+# --------------------------------------------------- estimator cost model
+_HBM_BW_DEFAULT = 819e9  # TPU v5e bytes/s — matches launch/dryrun.py
+
+
+def estimator_step_cost(terms: Dict, name: str, q: int = 1,
+                        param_bytes: Optional[float] = None,
+                        fused_update: bool = True,
+                        hbm_bw: float = _HBM_BW_DEFAULT) -> Dict:
+    """Project lowered-step roofline terms onto a different ZO estimator.
+
+    The train graph we lower and cost (launch/specs.py) is a fused
+    two-point step — ``repro.estimators.costs.BASELINE``: 2 forwards + 3
+    parameter axpy sweeps.  Other estimators change only the *counts* of
+    those two primitives, so their step time projects from the measured
+    terms without recompiling per estimator:
+
+      * forward-scaling work (flops, activation HBM traffic, per-layer TP
+        collectives) scales with the estimator's forward count;
+      * when ``param_bytes`` (per-device) is known, axpy sweeps are
+        re-priced exactly: each sweep moves ~2x the active parameter
+        bytes through HBM.  Without it, memory scales with forwards and
+        the sweep counts are still reported for the caller.
+    """
+    from repro.estimators import costs  # pure-python counts, no jax
+
+    base = costs.step_counts(costs.BASELINE, fused_update=True)
+    est = costs.step_counts(name, q=q, fused_update=fused_update)
+    f = est["forwards"] / base["forwards"]
+    # scaled times + counts only: copying the raw hlo_flops/bytes fields
+    # through unscaled would contradict the scaled *_s terms
+    out = {"estimator": name, "q": q, "forwards": est["forwards"],
+           "axpy_sweeps": est["axpy_sweeps"]}
+    out["compute_s"] = terms["compute_s"] * f
+    out["collective_s"] = terms["collective_s"] * f
+    if param_bytes:
+        sweep_s = 2.0 * param_bytes / hbm_bw
+        fwd_mem = max(0.0, terms["memory_s"] - base["axpy_sweeps"] * sweep_s)
+        out["memory_s"] = fwd_mem * f + est["axpy_sweeps"] * sweep_s
+    else:
+        out["memory_s"] = terms["memory_s"] * f
+    return out

@@ -83,16 +83,21 @@ def roofline_terms(cost, mem, coll, n_chips):
     }
 
 
-def model_flops(cfg, shape) -> float:
-    """6*N_active*D for train (3 passes: 2 fwd ~ 2ND each + ZO has no bwd
-    -> 2 forwards = 4*N*D ... we report the standard 6ND training-FLOPs
-    convention scaled to ZO: 2 forwards = 2 * 2*N*D tokens).  For decode,
-    one token per sequence."""
+def model_flops(cfg, shape, estimator: str = "two_point", q: int = 1) -> float:
+    """Analytic training FLOPs: forwards_per_step * 2*N_active*D tokens.
+
+    The forward count comes from the estimator cost model
+    (``repro.estimators.costs``): 2 for the paper's two-point SPSA, q+1
+    for FZOO-style one_sided, 2q for averaged — ZO has no backward pass
+    under any of them.  For decode, one token per sequence."""
+    from repro.estimators import costs as est_costs
+
     pshapes = specs.param_specs(cfg)
     n_active = lm.count_active_params(cfg, pshapes)
     if shape.kind == "train":
         tokens = shape.global_batch * shape.seq_len
-        return 2 * 2.0 * n_active * tokens      # two SPSA forwards
+        fwd = est_costs.step_counts(estimator, q=q)["forwards"]
+        return fwd * 2.0 * n_active * tokens    # SPSA forwards, no bwd
     if shape.kind == "prefill":
         return 2.0 * n_active * shape.global_batch * shape.seq_len
     return 2.0 * n_active * shape.global_batch  # decode: 1 token/seq
@@ -131,7 +136,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              variant: str = "optimized", verbose: bool = True,
-             hlo_dir: str = None, overrides: dict = None):
+             hlo_dir: str = None, overrides: dict = None,
+             estimator: str = "two_point", q: int = 1):
     t0 = time.time()
     cfg, shape, mesh, lowered, compiled = lower_cell(
         arch, shape_name, multi_pod, variant, overrides)
@@ -152,7 +158,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     terms = roofline_terms(ca, ma, coll, n_chips)
     terms["xla_raw_flops"] = ca_xla.get("flops")
     terms["xla_raw_bytes"] = ca_xla.get("bytes accessed")
-    mf = model_flops(cfg, shape)
+    mf = model_flops(cfg, shape, estimator=estimator, q=q)
+    # the lowered graph is always a two_point step, so utilization is
+    # computed estimator-invariantly (both sides scale with forwards)
+    mf_base = mf if estimator == "two_point" else model_flops(cfg, shape)
     mem = {}
     if ma is not None:
         mem = {"argument_bytes": ma.argument_size_in_bytes,
@@ -161,6 +170,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                "alias_bytes": ma.alias_size_in_bytes}
     rec = {
         "arch": arch, "shape": shape_name, "variant": variant,
+        "estimator": estimator, "q": q,
         "mesh": "pod2x16x16" if multi_pod else "16x16",
         "n_chips": int(n_chips),
         "compile_s": round(time.time() - t0, 1),
@@ -168,7 +178,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "roofline": terms,
         "model_flops_global": mf,
         "model_flops_per_chip": mf / n_chips,
-        "useful_flop_ratio": (mf / n_chips) / terms["hlo_flops"]
+        "useful_flop_ratio": (mf_base / n_chips) / terms["hlo_flops"]
         if terms["hlo_flops"] else None,
     }
     if verbose:
@@ -190,6 +200,12 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--variant", default="optimized",
                     choices=["optimized", "faithful", "mezo"])
+    ap.add_argument("--estimator", default="two_point",
+                    choices=["two_point", "one_sided", "averaged",
+                             "importance"],
+                    help="estimator assumed for the model-FLOPs column")
+    ap.add_argument("--q", type=int, default=1,
+                    help="directions per step for one_sided / averaged")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true",
@@ -215,7 +231,8 @@ def main():
     for arch, shape_name, mp in cells:
         try:
             rec = run_cell(arch, shape_name, mp, args.variant,
-                           hlo_dir=args.save_hlo)
+                           hlo_dir=args.save_hlo, estimator=args.estimator,
+                           q=args.q)
             results.append(rec)
             tag = f"{arch}_{shape_name}_{'mp' if mp else 'sp'}_{args.variant}"
             with open(os.path.join(args.out, tag + ".json"), "w") as f:

@@ -23,6 +23,12 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--set", action="append", default=[],
                     help="cfg override key=value (int/float/str)")
+    ap.add_argument("--estimator", default="two_point",
+                    choices=["two_point", "one_sided", "averaged",
+                             "importance"],
+                    help="project the measured cell onto this estimator")
+    ap.add_argument("--q", type=int, default=1,
+                    help="directions per step for one_sided / averaged")
     ap.add_argument("--top", type=int, default=10)
     ap.add_argument("--tag", default=None, help="save json under this tag")
     args = ap.parse_args()
@@ -57,6 +63,16 @@ def main():
     if ma:
         print(f"temp   ={ma.temp_size_in_bytes/2**30:10.2f} GiB  "
               f"args={ma.argument_size_in_bytes/2**30:.2f} GiB")
+    proj = None
+    if args.estimator != "two_point" or args.q != 1:
+        proj = analysis.estimator_step_cost(
+            terms, args.estimator, q=args.q,
+            param_bytes=ma.argument_size_in_bytes if ma else None)
+        print(f"\nprojected for estimator={args.estimator} q={args.q} "
+              f"({proj['forwards']} forwards, {proj['axpy_sweeps']} sweeps):")
+        print(f"compute={proj['compute_s']*1e3:10.2f} ms  "
+              f"memory={proj['memory_s']*1e3:10.2f} ms  "
+              f"coll={proj['collective_s']*1e3:10.2f} ms")
     print(f"\ntop collectives (GiB wire/device/step):")
     for k, v in sorted(cost.detail.items(), key=lambda x: -x[1])[:args.top]:
         print(f"  {v/2**30:9.3f}  {k[:110]}")
@@ -64,6 +80,7 @@ def main():
         os.makedirs("artifacts/hillclimb", exist_ok=True)
         with open(f"artifacts/hillclimb/{args.tag}.json", "w") as f:
             json.dump({"overrides": overrides, "terms": terms,
+                       "estimator_projection": proj,
                        "detail": dict(sorted(cost.detail.items(),
                                              key=lambda x: -x[1])[:30])},
                       f, indent=1)

@@ -22,6 +22,12 @@ def main():
     ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
     ap.add_argument("--optimizer", default="lezo",
                     choices=["lezo", "mezo", "fo"])
+    ap.add_argument("--estimator", default="two_point",
+                    choices=["two_point", "one_sided", "averaged",
+                             "importance"],
+                    help="ZO gradient estimator (repro.estimators)")
+    ap.add_argument("--q", type=int, default=1,
+                    help="directions per step for one_sided / averaged")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch-size", type=int, default=16)
     ap.add_argument("--lr", type=float, default=1e-4)
@@ -50,13 +56,15 @@ def main():
         mode="fo" if args.optimizer == "fo" else "zo",
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         quorum=args.quorum, n_loss_shards=args.loss_shards,
-        peft=args.peft, seed=args.seed, eval_every=max(1, args.steps // 4))
+        peft=args.peft, seed=args.seed, eval_every=max(1, args.steps // 4),
+        estimator=args.estimator, est_q=args.q)
     zcfg = zo.ZOConfig(eps=args.eps, lr=args.lr, n_drop=n_drop,
                        backend=args.backend)
     trainer = Trainer(mcfg, task, tcfg, zo_cfg=zcfg)
     hist = trainer.train()
     summary = {
         "arch": args.arch, "optimizer": args.optimizer,
+        "estimator": args.estimator, "q": args.q,
         "n_layers": n_layers, "n_drop": n_drop,
         "final_loss": hist["loss"][-1] if hist["loss"] else None,
         "val_loss": hist["val_loss"], "val_acc": hist["val_acc"],

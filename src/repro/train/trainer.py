@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import estimators
 from repro.core import fo, rng, zo, zo_adaptive
 from repro.data import synthetic
 from repro.models import frontends, lm
@@ -35,6 +36,10 @@ class TrainConfig:
     log_every: int = 50
     seed: int = 0
     mode: str = "zo"              # zo | zo_momentum | fo
+    # gradient estimator for mode="zo" (see repro.estimators):
+    # two_point | one_sided | averaged | importance
+    estimator: str = "two_point"
+    est_q: int = 1                # directions/step for one_sided & averaged
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0
     keep_ckpts: int = 2
@@ -51,9 +56,13 @@ class Trainer:
                  zo_cfg: zo.ZOConfig = zo.ZOConfig(),
                  fo_cfg: fo.FOConfig = fo.FOConfig(),
                  lora_cfg: lora_mod.LoRAConfig = lora_mod.LoRAConfig(),
-                 prefix_cfg: prefix_mod.PrefixConfig = prefix_mod.PrefixConfig()):
+                 prefix_cfg: prefix_mod.PrefixConfig = prefix_mod.PrefixConfig(),
+                 est_cfg: Optional[estimators.EstimatorConfig] = None):
         self.mcfg, self.task, self.tcfg = model_cfg, task, tcfg
         self.zo_cfg, self.fo_cfg = zo_cfg, fo_cfg
+        # explicit est_cfg wins; else lift zo_cfg + TrainConfig plumbing
+        self.est_cfg = est_cfg or estimators.from_zo(
+            zo_cfg, name=tcfg.estimator, q=tcfg.est_q)
         key = jax.random.PRNGKey(tcfg.seed)
         self.base_params = lm.init_params(model_cfg, key)
 
@@ -113,8 +122,10 @@ class Trainer:
     # ------------------------------------------------------------- step
     def _build_step(self):
         if self.tcfg.mode == "zo":
-            step = zo.make_zo_step(self.loss_fn, self.spec, self.zo_cfg)
-            self._step = jax.jit(step, donate_argnums=0)
+            step, init = estimators.make_step(self.loss_fn, self.spec,
+                                              self.est_cfg)
+            self._step = jax.jit(step, donate_argnums=(0, 1))
+            self.est_state = init()
             self.fo_state = None
         elif self.tcfg.mode == "zo_momentum":
             mcfg = zo_adaptive.ZOMomentumConfig(
@@ -147,6 +158,9 @@ class Trainer:
         if self.ckpt and self.ckpt.latest() is not None:
             params, start, _, _ = self.ckpt.restore(params)
             params = jax.tree.map(jnp.asarray, params)
+            # estimator state (O(scalars), e.g. importance EMA scores) is
+            # not checkpointed: after resume it re-warms from init within
+            # ~1/(1-decay) steps (DESIGN.md §7)
 
         history = {"step": [], "loss": [], "val_loss": [], "val_step": [],
                    "val_acc": [], "wall": []}
@@ -160,8 +174,8 @@ class Trainer:
             batch = {k: jnp.asarray(v) for k, v in np_batch.items()
                      if k != "class_labels"}
             if self.tcfg.mode == "zo":
-                params, metrics = self._step(params, batch, jnp.int32(t),
-                                             base_seed)
+                params, self.est_state, metrics = self._step(
+                    params, self.est_state, batch, jnp.int32(t), base_seed)
             elif self.tcfg.mode == "zo_momentum":
                 params, self.mom_state, metrics = self._mom_step(
                     params, self.mom_state, batch, jnp.int32(t), base_seed)

@@ -1,7 +1,7 @@
 """Counter-RNG statistical and determinism properties."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import rng
 from repro.kernels import ref
