@@ -1,15 +1,20 @@
 # One memorable entry point per CI stage.
-#   make test        - tier-1 suite (the ROADMAP.md verify command)
+#   make test-fast   - tier-1: every test not marked `slow` (<~90s on CPU);
+#                      this is what .github/workflows/ci.yml runs per push
+#   make test        - tier-2: the full suite (the ROADMAP.md verify command)
 #   make bench-smoke - fast estimator-sweep benchmark on CPU interpret mode
 #   make lint        - bytecode-compile everything (+ ruff when installed)
 
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-smoke lint
+.PHONY: test test-fast bench-smoke lint
 
 test:
 	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
 
 bench-smoke:
 	$(PY) benchmarks/estimator_sweep.py --smoke

@@ -17,8 +17,15 @@ ARCHS = {
     "opt-13b": "opt",
 }
 
+# Accepted spellings that resolve to a registry id but stay out of
+# list_archs() so sweeps/dry-run grids don't run the same config twice.
+ALIASES = {
+    "opt": "opt-13b",      # family alias: full() is the 13b paper model
+}
+
 
 def get(arch: str, variant: str = "full"):
+    arch = ALIASES.get(arch, arch)
     if arch not in ARCHS:
         raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
     mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")

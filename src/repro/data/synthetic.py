@@ -1,4 +1,10 @@
-"""Synthetic fine-tuning tasks (SuperGLUE stand-ins, see DESIGN.md §8).
+"""Synthetic fine-tuning streams (SuperGLUE stand-ins, see DESIGN.md §8).
+
+This module defines the repo's canonical batch format — ``{tokens,
+labels, loss_mask, class_labels}`` — which the SuperGLUE-style task
+registry (``repro/tasks/``, DESIGN.md §9) also compiles down to; prefer
+``--task <name>`` registry tasks for anything metric-bearing, and these
+streams for raw convergence/throughput work.
 
 Offline container => no SST-2/BoolQ/SQuAD.  These tasks exercise the same
 code paths and difficulty *structure*:

@@ -11,6 +11,7 @@ import argparse
 import json
 
 from repro import configs
+from repro import tasks as tasks_mod
 from repro.core import zo
 from repro.data import synthetic
 from repro.train.trainer import Trainer, TrainConfig
@@ -20,6 +21,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="opt-13b")
     ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--task", default=None,
+                    help="registry task name (repro.tasks); default: the "
+                         "legacy synthetic classification stream")
     ap.add_argument("--optimizer", default="lezo",
                     choices=["lezo", "mezo", "fo"])
     ap.add_argument("--estimator", default="two_point",
@@ -47,8 +51,12 @@ def main():
     args = ap.parse_args()
 
     mcfg = configs.get(args.arch, args.variant)
-    task = synthetic.TaskConfig(vocab=mcfg.vocab, seq_len=args.seq_len,
-                                n_classes=2, seed=args.seed)
+    if args.task:
+        task = tasks_mod.build(args.task, vocab=mcfg.vocab,
+                               seq_len=args.seq_len, seed=args.seed)
+    else:
+        task = synthetic.TaskConfig(vocab=mcfg.vocab, seq_len=args.seq_len,
+                                    n_classes=2, seed=args.seed)
     n_layers = mcfg.num_layers
     n_drop = 0 if args.optimizer == "mezo" else int(args.sparsity * n_layers)
     tcfg = TrainConfig(
@@ -65,9 +73,12 @@ def main():
     summary = {
         "arch": args.arch, "optimizer": args.optimizer,
         "estimator": args.estimator, "q": args.q,
+        "task": args.task or "synthetic",
+        "metric": hist.get("metric_name", "val_loss"),
         "n_layers": n_layers, "n_drop": n_drop,
         "final_loss": hist["loss"][-1] if hist["loss"] else None,
         "val_loss": hist["val_loss"], "val_acc": hist["val_acc"],
+        "best_step": hist.get("best_step"),
     }
     print(json.dumps(summary, indent=1))
     if args.out:

@@ -1,0 +1,22 @@
+"""SuperGLUE-style task & evaluation subsystem (DESIGN.md §9).
+
+    spec = tasks.get("sst2")                      # declarative TaskSpec
+    task = tasks.build("sst2", vocab=512, seq_len=64)
+    data = task.make_dataset(4096)                # synthetic-batch format
+    acc  = task.evaluate(mcfg, params, data, lm)  # task's primary metric
+
+Tasks compile down to the exact batch dict ``data/synthetic.py``
+produces, so the model stack, kernels, and estimators never see the
+difference; ``train.Trainer`` and ``launch/evaluate.py`` consume the
+metric protocol.
+"""
+from repro.tasks.base import (CompiledTask, KINDS, METRICS,
+                              MODEL_BATCH_KEYS, TaskSpec, compile_task)
+from repro.tasks.generators import json_examples
+from repro.tasks.registry import (TASKS, build, classification_names, get,
+                                  names, register)
+from repro.tasks import metrics, vocab
+
+__all__ = ["CompiledTask", "KINDS", "METRICS", "MODEL_BATCH_KEYS", "TASKS",
+           "TaskSpec", "build", "classification_names", "compile_task",
+           "get", "json_examples", "metrics", "names", "register", "vocab"]

@@ -1,0 +1,105 @@
+"""Task metrics over logit-scored verbalizers and choice continuations.
+
+Three scoring modes, matching how MeZO-style prompt fine-tuning is
+evaluated (DESIGN.md §9):
+
+  * verbalizer argmax — classification: logits at the answer position,
+    restricted to the task's verbalizer token ids;
+  * continuation log-likelihood — multiple choice: length-normalized
+    sum of per-token log-probs over each candidate continuation;
+  * teacher-forced exact match — generation: argmax at every answer
+    position must equal the gold token.
+
+Aggregates (accuracy, macro-F1, exact match) are plain numpy over the
+per-example predictions; model scoring is jnp and works on any params
+tree the trainer produces.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+
+def accuracy(pred: np.ndarray, gold: np.ndarray) -> float:
+    return float(np.mean(pred == gold))
+
+
+def macro_f1(pred: np.ndarray, gold: np.ndarray, n_classes: int) -> float:
+    """Unweighted mean of per-class F1 (classes absent from both sides
+    contribute 0, the sklearn zero_division=0 convention)."""
+    f1s = []
+    for c in range(n_classes):
+        tp = float(np.sum((pred == c) & (gold == c)))
+        fp = float(np.sum((pred == c) & (gold != c)))
+        fn = float(np.sum((pred != c) & (gold == c)))
+        denom = 2 * tp + fp + fn
+        f1s.append(2 * tp / denom if denom > 0 else 0.0)
+    return float(np.mean(f1s))
+
+
+def exact_match(pred_rows: np.ndarray) -> float:
+    return float(np.mean(pred_rows))
+
+
+# -------------------------------------------------------- model scoring
+@functools.lru_cache(maxsize=None)
+def _logits_runner(lm_module, last_only: bool = False):
+    """One jitted scorer per (lm module, position mode); ModelConfig is a
+    frozen (hashable) dataclass, so jit then caches per (config, shapes)
+    across the many eval calls a training run makes.  ``last_only``
+    projects just the answer position — at real vocab sizes the full
+    (B, S-1, V) logits tensor is S-times the cost and only the
+    choice/EM scorers actually need it."""
+    import jax
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def run(cfg, p, toks):
+        hidden, _, _ = lm_module.forward(cfg, p, toks, mode="train")
+        hidden = hidden[:, -1] if last_only else hidden
+        return lm_module.logits_fn(cfg, p, hidden)
+
+    return run
+
+
+def _full_logits(mcfg, params, inputs, lm_module):
+    import jax.numpy as jnp
+    return _logits_runner(lm_module)(mcfg, params, jnp.asarray(inputs))
+
+
+def verbalizer_predict(mcfg, params, inputs, verb_ids, lm_module) -> np.ndarray:
+    """Argmax over verbalizer logits at the answer position -> class ids."""
+    import jax.numpy as jnp
+    logits = _logits_runner(lm_module, last_only=True)(
+        mcfg, params, jnp.asarray(inputs))                # (B, V) f32
+    return np.asarray(jnp.argmax(logits[:, jnp.asarray(verb_ids)], axis=-1))
+
+
+def choice_scores(mcfg, params, choice_inputs, choice_labels, choice_mask,
+                  lm_module) -> np.ndarray:
+    """Length-normalized continuation log-prob for each of k choices.
+
+    choice_inputs/labels: (n, k, S-1) int32; choice_mask: (n, k, S-1).
+    Returns (n, k) float scores.
+    """
+    import jax
+    import jax.numpy as jnp
+    n, k, s = choice_inputs.shape
+    flat = lambda a: jnp.asarray(a).reshape(n * k, s)
+    logits = _full_logits(mcfg, params, flat(choice_inputs), lm_module)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    gold = jnp.take_along_axis(logp, flat(choice_labels)[..., None],
+                               axis=-1)[..., 0]
+    m = flat(choice_mask)
+    score = jnp.sum(gold * m, axis=-1) / jnp.maximum(jnp.sum(m, axis=-1), 1.0)
+    return np.asarray(score.reshape(n, k))
+
+
+def exact_match_hits(mcfg, params, inputs, labels, loss_mask,
+                     lm_module) -> np.ndarray:
+    """Per-row 0/1: teacher-forced argmax equals gold at every answer
+    position (positions where loss_mask is set)."""
+    import jax.numpy as jnp
+    pred = jnp.argmax(_full_logits(mcfg, params, inputs, lm_module), axis=-1)
+    ok = (pred == jnp.asarray(labels)) | (jnp.asarray(loss_mask) == 0)
+    return np.asarray(jnp.all(ok, axis=-1).astype(np.float32))

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import estimators
+from repro import tasks as tasks_mod
 from repro.core import fo, rng, zo, zo_adaptive
 from repro.data import synthetic
 from repro.models import frontends, lm
@@ -51,7 +52,13 @@ class TrainConfig:
 
 
 class Trainer:
-    def __init__(self, model_cfg, task: synthetic.TaskConfig,
+    """``task`` is either a legacy ``synthetic.TaskConfig`` or a registry
+    ``tasks.CompiledTask``.  Registry tasks switch validation to the
+    task's metric protocol and best-checkpoint selection to highest
+    metric (the SuperGLUE protocol); synthetic tasks keep lowest
+    validation loss, the paper's protocol."""
+
+    def __init__(self, model_cfg, task,
                  tcfg: TrainConfig,
                  zo_cfg: zo.ZOConfig = zo.ZOConfig(),
                  fo_cfg: fo.FOConfig = fo.FOConfig(),
@@ -60,6 +67,8 @@ class Trainer:
                  est_cfg: Optional[estimators.EstimatorConfig] = None):
         self.mcfg, self.task, self.tcfg = model_cfg, task, tcfg
         self.zo_cfg, self.fo_cfg = zo_cfg, fo_cfg
+        self.registry_task = (task if isinstance(task, tasks_mod.CompiledTask)
+                              else None)
         # explicit est_cfg wins; else lift zo_cfg + TrainConfig plumbing
         self.est_cfg = est_cfg or estimators.from_zo(
             zo_cfg, name=tcfg.estimator, q=tcfg.est_q)
@@ -143,14 +152,29 @@ class Trainer:
             self.fo_state = fo.init_state(self.trainable, self.fo_cfg)
         self._eval_loss = jax.jit(self.loss_fn)
 
+    # ------------------------------------------------------------- data
+    def make_dataset(self, n: int, seed_shift: int = 0):
+        """Dataset in the synthetic batch format, from either task type."""
+        if self.registry_task is not None:
+            t = self.registry_task
+            return t.make_dataset(n, seed=t.seed + seed_shift)
+        return synthetic.make_dataset(
+            dataclasses.replace(self.task, seed=self.task.seed + seed_shift)
+            if seed_shift else self.task, n)
+
+    @staticmethod
+    def _model_batch(np_batch, n=None):
+        """Strip eval-only keys; the loss/model sees only token arrays."""
+        return {k: jnp.asarray(v if n is None else v[:n])
+                for k, v in np_batch.items() if k in tasks_mod.MODEL_BATCH_KEYS}
+
     # ------------------------------------------------------------ train
     def train(self, train_data=None, val_data=None) -> Dict[str, Any]:
-        tcfg, task = self.tcfg, self.task
+        tcfg = self.tcfg
         if train_data is None:
-            train_data = synthetic.make_dataset(task, 4096)
+            train_data = self.make_dataset(4096)
         if val_data is None:
-            val_data = synthetic.make_dataset(
-                dataclasses.replace(task, seed=task.seed + 1), 512)
+            val_data = self.make_dataset(512, seed_shift=1)
         base_seed = np.uint32(rng.fold_py(tcfg.seed, 0xC0FFEE))
 
         start = 0
@@ -164,15 +188,22 @@ class Trainer:
 
         history = {"step": [], "loss": [], "val_loss": [], "val_step": [],
                    "val_acc": [], "wall": []}
-        best = (np.inf, None, -1)
+        if self.registry_task is not None:
+            history["metric_name"] = self.registry_task.metric
+        # best-checkpoint score, maximized: task metric for registry tasks
+        # (SuperGLUE protocol), -val_loss otherwise (the paper's protocol)
+        best = (-np.inf, None, -1)
         t0 = time.perf_counter()
-        stream = synthetic.batches(train_data, tcfg.batch_size, tcfg.steps,
+        # eval-only arrays (e.g. multiple-choice candidates) would be
+        # fancy-indexed every step just to be dropped by _model_batch
+        stream_data = {k: v for k, v in train_data.items()
+                       if k in tasks_mod.MODEL_BATCH_KEYS}
+        stream = synthetic.batches(stream_data, tcfg.batch_size, tcfg.steps,
                                    seed=tcfg.seed + 7)
         for t, np_batch in enumerate(stream):
             if t < start:
                 continue
-            batch = {k: jnp.asarray(v) for k, v in np_batch.items()
-                     if k != "class_labels"}
+            batch = self._model_batch(np_batch)
             if self.tcfg.mode == "zo":
                 params, self.est_state, metrics = self._step(
                     params, self.est_state, batch, jnp.int32(t), base_seed)
@@ -191,8 +222,9 @@ class Trainer:
                 history["val_step"].append(t + 1)
                 history["val_loss"].append(vl)
                 history["val_acc"].append(va)
-                if vl < best[0]:
-                    best = (vl, jax.tree.map(np.asarray, params), t + 1)
+                score = va if self.registry_task is not None else -vl
+                if score > best[0]:
+                    best = (score, jax.tree.map(np.asarray, params), t + 1)
             if self.ckpt and tcfg.ckpt_every and (t + 1) % tcfg.ckpt_every == 0:
                 self.ckpt.save(t + 1, params, int(base_seed), blocking=False)
         if self.ckpt:
@@ -204,13 +236,18 @@ class Trainer:
         return history
 
     def evaluate(self, params, val_data, max_examples=256):
+        """Returns (val_loss, metric): the registry task's primary metric,
+        or verbalizer accuracy for legacy synthetic tasks (-1 if n/a)."""
         n = min(max_examples, val_data["tokens"].shape[0])
-        batch = {k: jnp.asarray(v[:n]) for k, v in val_data.items()
-                 if k != "class_labels"}
-        vl = float(self._eval_loss(params, batch))
-        va = -1.0
-        if self.task.kind in ("classification", "multiple_choice"):
+        vl = float(self._eval_loss(params, self._model_batch(val_data, n)))
+        if self.registry_task is not None:
+            va = self.registry_task.evaluate(
+                self.mcfg, self._to_model(params), val_data, lm,
+                max_examples=n)
+        elif self.task.kind in ("classification", "multiple_choice"):
             va = synthetic.classification_accuracy(
                 self.mcfg, self._to_model(params), val_data, self.task, lm,
                 max_examples=n)
+        else:
+            va = -1.0
         return vl, va

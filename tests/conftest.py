@@ -1,4 +1,31 @@
 import os
+import re
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from tiers import SLOW_NODE_PATTERNS  # noqa: E402
+
+
+def _compile(patterns):
+    """'*'-only wildcards: unlike fnmatch, '[' / ']' are literal, since
+    pytest node ids use brackets for parametrized cases."""
+    parts = (".*".join(re.escape(p) for p in pat.split("*"))
+             for pat in patterns)
+    # one ^(?:...)$ group per pattern: without it the $ would bind only
+    # to the last alternative and the rest would prefix-match
+    return re.compile("|".join("^(?:%s)$" % p for p in parts))
+
+
+_SLOW_RE = _compile(SLOW_NODE_PATTERNS)
+
+
+def pytest_collection_modifyitems(config, items):
+    """Apply the tier manifest: mark measured-heavy tests ``slow`` so
+    ``pytest -m "not slow"`` (make test-fast) is the <~90s tier-1 gate.
+    See tests/tiers.py for the policy and the per-case pattern list."""
+    for item in items:
+        if _SLOW_RE.match(item.nodeid):
+            item.add_marker(pytest.mark.slow)

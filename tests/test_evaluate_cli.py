@@ -1,0 +1,54 @@
+"""launch/evaluate.py: the task metric-report CLI."""
+import json
+
+import pytest
+
+from repro import tasks
+from repro.launch import evaluate
+
+
+@pytest.mark.slow
+def test_zeroshot_report_covers_all_registered_tasks(tmp_path, capsys):
+    """`--task all --arch opt --variant smoke` emits a JSON metric record
+    for every registered task (the >=6-task acceptance gate)."""
+    out = tmp_path / "report.json"
+    reports = evaluate.main([
+        "--task", "all", "--arch", "opt", "--variant", "smoke",
+        "--mode", "zeroshot", "--n-examples", "32", "--seq-len", "32",
+        "--out", str(out)])
+    assert len(reports) == len(tasks.names()) >= 6
+    by_name = {r["task"]: r for r in reports}
+    for name in tasks.names():
+        r = by_name[name]
+        assert r["metric"] in tasks.METRICS
+        assert 0.0 <= r["zeroshot"] <= 1.0
+        assert r["zeroshot_val_loss"] > 0
+    # stdout and --out both carry the same parseable JSON
+    assert json.loads(capsys.readouterr().out) == json.loads(out.read_text())
+    assert json.loads(out.read_text()) == reports
+
+
+@pytest.mark.slow
+def test_single_task_train_mode(tmp_path):
+    r = evaluate.main([
+        "--task", "sst2", "--arch", "opt", "--variant", "smoke",
+        "--mode", "train", "--steps", "20", "--batch-size", "8",
+        "--n-examples", "32", "--seq-len", "32"])[0]
+    assert r["task"] == "sst2" and r["mode"] == "train"
+    assert "trained" in r and "zeroshot" in r
+    assert 0.0 <= r["trained"] <= 1.0
+    assert len(r["val_metric_curve"]) >= 1
+
+
+def test_unknown_task_rejected():
+    with pytest.raises(KeyError):
+        evaluate.evaluate_task("not_a_task", variant="smoke")
+
+
+def test_single_task_zeroshot_fast():
+    """Tier-1 CLI smoke: one task, tiny eval set."""
+    r = evaluate.main(["--task", "boolq", "--arch", "opt",
+                       "--variant", "smoke", "--mode", "zeroshot",
+                       "--n-examples", "16", "--seq-len", "32"])
+    assert len(r) == 1 and r[0]["task"] == "boolq"
+    assert 0.0 <= r[0]["zeroshot"] <= 1.0

@@ -1,0 +1,121 @@
+"""Property tests for core/selection.py layer-selection policies.
+
+The LeZO contract every replica and every restart relies on (DESIGN.md
+§2): for each policy, the active mask (1) keeps exactly
+``num_layers - n_drop`` layers, (2) is a deterministic pure function of
+(seed, step, weights), and (3) for ``weighted``, respects the weights —
+a high-weight layer survives strictly more often than a low-weight one.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from _hyp import given, settings, st  # optional-hypothesis shim
+
+from repro.core import selection
+
+
+def _mask(policy, num_layers, n_drop, seed, step, weights=None):
+    fn = selection.make_policy(policy, num_layers, n_drop)
+    w = None if weights is None else jnp.asarray(weights, jnp.float32)
+    return np.asarray(fn(jnp.uint32(seed), jnp.int32(step), w))
+
+
+def _weights(num_layers, seed):
+    return 0.1 + np.random.default_rng(seed).random(num_layers)
+
+
+@given(st.sampled_from(selection.POLICIES), st.integers(2, 33),
+       st.integers(0, 2**32 - 1), st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_cardinality_exact(policy, num_layers, seed, step):
+    """|active| == num_layers - n_drop for every policy, any n_drop."""
+    for n_drop in {0, 1, num_layers // 2, num_layers - 1}:
+        m = _mask(policy, num_layers, n_drop, seed, step,
+                  weights=_weights(num_layers, 0))
+        assert m.shape == (num_layers,)
+        assert int(m.sum()) == num_layers - n_drop, (policy, n_drop)
+
+
+@given(st.sampled_from(selection.POLICIES), st.integers(0, 2**32 - 1),
+       st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_mask_deterministic_in_seed_and_step(policy, seed, step):
+    """Same (seed, step, weights) -> bit-identical mask; this is what lets
+    every data-parallel replica derive the subset with no communication."""
+    w = _weights(12, 7)
+    a = _mask(policy, 12, 5, seed, step, weights=w)
+    b = _mask(policy, 12, 5, seed, step, weights=w)
+    assert np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("policy", selection.POLICIES)
+def test_cardinality_exact_grid(policy):
+    """Hypothesis-free version of the cardinality property: a fixed
+    (num_layers, n_drop, seed, step) grid, so the invariant is enforced
+    even in containers without hypothesis."""
+    for num_layers in (2, 16, 31):
+        w = _weights(num_layers, 1)
+        for n_drop in {0, 1, num_layers // 2, num_layers - 1}:
+            for seed, step in ((0, 0), (0xFFFFFFFF, 9999)):
+                m = _mask(policy, num_layers, n_drop, seed, step, weights=w)
+                assert int(m.sum()) == num_layers - n_drop, \
+                    (policy, num_layers, n_drop, seed, step)
+
+
+@pytest.mark.parametrize("policy", selection.POLICIES)
+def test_mask_deterministic_grid(policy):
+    w = _weights(12, 7)
+    for seed, step in ((0, 0), (42, 1), (2**31, 500), (7, 10_000)):
+        a = _mask(policy, 12, 5, seed, step, weights=w)
+        b = _mask(policy, 12, 5, seed, step, weights=w)
+        assert np.array_equal(a, b), (policy, seed, step)
+
+
+def test_uniform_varies_with_seed_and_round_robin_with_step():
+    masks = {tuple(_mask("uniform", 16, 8, s, 0)) for s in range(24)}
+    assert len(masks) > 1                     # not a constant function
+    rr = {tuple(_mask("round_robin", 16, 8, 0, t)) for t in range(16)}
+    assert len(rr) == 16                      # the window actually walks
+
+
+def test_round_robin_window_contiguous():
+    for step in range(20):
+        m = _mask("round_robin", 10, 6, 0, step)
+        idx = np.flatnonzero(m)
+        # contiguous modulo num_layers: gaps sum to num_layers - k
+        ext = np.r_[idx, idx[0] + 10]
+        assert (np.diff(ext) == 1).sum() >= len(idx) - 1
+
+
+def test_uniform_rejects_bad_n_drop():
+    with pytest.raises(ValueError):
+        selection.uniform_active(jnp.uint32(0), 4, 4)
+    with pytest.raises(ValueError):
+        selection.uniform_active(jnp.uint32(0), 4, -1)
+
+
+def test_weighted_keeps_high_weight_layer_more_often():
+    """Over many seeds, the heaviest layer must survive strictly more
+    often than the lightest one (Gumbel top-k respects weights)."""
+    num_layers, n_drop = 8, 4
+    w = np.ones(num_layers, np.float32)
+    hi, lo = 2, 5
+    w[hi], w[lo] = 20.0, 0.05
+    n_seeds = 160
+    kept = np.zeros(num_layers)
+    for seed in range(n_seeds):
+        kept += _mask("weighted", num_layers, n_drop, seed, 0, weights=w)
+    assert kept[hi] > kept[lo] + 0.15 * n_seeds
+    assert kept[hi] >= 0.9 * n_seeds          # near-always kept
+    # every layer still has a chance: fully stochastic, LISA-style
+    assert (kept > 0).all()
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_weighted_uniform_weights_cardinality(seed):
+    """Degenerate equal weights: still exact cardinality, no ties lost."""
+    m = _mask("weighted", 9, 3, seed, 0, weights=np.ones(9, np.float32))
+    assert int(m.sum()) == 6

@@ -1,0 +1,260 @@
+"""Task registry & evaluation subsystem: specs, compilation, metrics."""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import tasks
+from repro.configs import opt
+from repro.models import lm
+from repro.tasks import metrics, vocab
+
+VOCAB, SEQ = 512, 48
+MCFG = opt.opt_tiny(layers=2, d_model=64, vocab=VOCAB)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(MCFG, jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------- registry
+def test_registry_has_superglue_coverage():
+    names = tasks.names()
+    assert len(names) >= 6
+    for required in ("sst2", "boolq", "copa", "rte", "wic"):
+        assert required in names
+    kinds = {tasks.get(n).kind for n in names}
+    assert "generation" in kinds          # >=1 generative task
+    assert len(tasks.classification_names()) >= 4
+
+
+def test_register_rejects_duplicates_and_bad_specs():
+    with pytest.raises(ValueError):
+        tasks.register(tasks.get("sst2"))
+    with pytest.raises(ValueError):
+        tasks.TaskSpec(name="x", kind="nope", template="{a}",
+                       generator=lambda s, n: [])
+    with pytest.raises(ValueError):
+        tasks.TaskSpec(name="x", kind="classification", template="{a}",
+                       generator=lambda s, n: [], verbalizers=("one",))
+    with pytest.raises(KeyError):
+        tasks.get("not_a_task")
+
+
+# ---------------------------------------------------------- compilation
+@pytest.mark.parametrize("name", tasks.names())
+def test_compiled_batch_format(name):
+    """Every task compiles to the synthetic.make_dataset batch contract."""
+    t = tasks.build(name, vocab=VOCAB, seq_len=SEQ)
+    d = t.make_dataset(16)
+    assert d["tokens"].shape == (16, SEQ - 1)
+    assert d["labels"].shape == (16, SEQ - 1)
+    assert d["loss_mask"].shape == (16, SEQ - 1)
+    assert d["tokens"].dtype == np.int32 and d["labels"].dtype == np.int32
+    assert (d["tokens"] >= 0).all() and (d["tokens"] < VOCAB).all()
+    assert (d["loss_mask"].sum(1) >= 1).all()    # every row supervises
+    # loss is never on PAD labels
+    assert (d["labels"][d["loss_mask"] > 0] != vocab.PAD).all()
+    # shifted-by-one alignment: labels[t] == tokens[t+1]
+    assert np.array_equal(d["tokens"][:, 1:], d["labels"][:, :-1])
+
+
+@pytest.mark.parametrize("name", tasks.names())
+def test_compiled_dataset_deterministic(name):
+    t = tasks.build(name, vocab=VOCAB, seq_len=SEQ)
+    a, b = t.make_dataset(8), t.make_dataset(8)
+    for k in a:
+        assert np.array_equal(a[k], b[k]), k
+    c = t.make_dataset(8, seed=123)
+    assert not all(np.array_equal(a[k], c[k]) for k in a)
+
+
+def test_classification_layout():
+    t = tasks.build("sst2", vocab=VOCAB, seq_len=SEQ)
+    d = t.make_dataset(32)
+    # answer position: exactly one supervised label, the verbalizer token
+    assert (d["loss_mask"].sum(1) == 1).all()
+    assert (d["loss_mask"][:, -1] == 1).all()
+    verb = d["labels"][:, -1]
+    assert set(np.unique(verb)) <= set(t.verb_ids.tolist())
+    assert np.array_equal(verb, t.verb_ids[d["class_labels"]])
+    # query marker sits right before the answer
+    assert (d["tokens"][:, -1] == vocab.query_token(VOCAB)).all()
+
+
+def test_multiple_choice_layout():
+    t = tasks.build("copa", vocab=VOCAB, seq_len=SEQ)
+    d = t.make_dataset(16)
+    n, k, s = d["choice_inputs"].shape
+    assert (n, k, s) == (16, 2, SEQ - 1)
+    # the gold continuation row equals the training sequence
+    rows = np.arange(n)
+    gold_inp = d["choice_inputs"][rows, d["class_labels"]]
+    assert np.array_equal(gold_inp, d["tokens"])
+    assert np.array_equal(d["choice_labels"][rows, d["class_labels"]],
+                          d["labels"])
+    # scoring mask covers the same positions as the training loss mask
+    assert np.array_equal(d["choice_mask"][rows, d["class_labels"]],
+                          d["loss_mask"])
+    assert (d["choice_mask"].sum(-1) >= 1).all()
+
+
+def test_generation_answer_is_copied_span():
+    t = tasks.build("squad_copy", vocab=VOCAB, seq_len=SEQ)
+    d = t.make_dataset(16)
+    for i in range(16):
+        ans = d["labels"][i][d["loss_mask"][i] > 0]
+        prompt = d["tokens"][i]
+        for tok in ans:                  # extractive: answer ⊂ context
+            assert tok in prompt
+
+
+def test_signal_pools_hash_disjoint_at_reference_vocab():
+    """The FNV tokenizer may merge words; a merge ACROSS signal pools
+    would leak one class's signal into another (or into neutral filler),
+    silently corrupting the planted task signal.  Pin pairwise id-
+    disjointness of every generator pool at the reference vocab=512
+    (deliberate shared words like WiC's target 'bank' are exempt)."""
+    from repro.tasks import generators as g
+    pools = {"NEUTRAL": g.NEUTRAL, "POS": g.POS_WORDS, "NEG": g.NEG_WORDS,
+             "TRUE": g.TRUE_WORDS, "FALSE": g.FALSE_WORDS,
+             "CB0": g.CB_WORDS[0], "CB1": g.CB_WORDS[1], "CB2": g.CB_WORDS[2],
+             "SENSE_A": g.SENSE_A, "SENSE_B": g.SENSE_B}
+    owner = {}
+    clashes = []
+    for pname, words in pools.items():
+        for w in words:
+            wid = vocab.word_id(w, VOCAB)
+            prev = owner.setdefault(wid, (pname, w))
+            if prev[1] != w:
+                clashes.append((prev, (pname, w), wid))
+    assert not clashes, f"hash collisions across signal pools: {clashes}"
+    # literal word sharing across pools is also signal leakage; only the
+    # WiC target word is deliberately shared between its two sense pools
+    for pa, pb in [("NEUTRAL", "SENSE_A"), ("NEUTRAL", "SENSE_B"),
+                   ("NEUTRAL", "POS"), ("NEUTRAL", "NEG"),
+                   ("NEUTRAL", "TRUE"), ("NEUTRAL", "FALSE")]:
+        assert not set(pools[pa]) & set(pools[pb]), (pa, pb)
+    assert set(g.SENSE_A) & set(g.SENSE_B) == {"bank"}
+
+
+def test_verbalizers_reserved_and_distinct():
+    for name in tasks.classification_names():
+        t = tasks.build(name, vocab=VOCAB, seq_len=SEQ)
+        ids = t.verb_ids.tolist()
+        assert len(set(ids)) == len(ids)
+        assert all(i >= VOCAB - vocab.N_RESERVED for i in ids)
+        # content words can never collide with control tokens
+        assert vocab.word_id("anything", VOCAB) < VOCAB - vocab.N_RESERVED
+
+
+def test_json_backed_task(tmp_path):
+    path = tmp_path / "examples.json"
+    examples = [{"text": f"great brilliant superb sample {i}", "label": 1}
+                if i % 2 else
+                {"text": f"dreadful tedious hollow sample {i}", "label": 0}
+                for i in range(10)]
+    path.write_text(json.dumps(examples))
+    spec = tasks.TaskSpec(
+        name="json_sst2_test", kind="classification",
+        template="review : {text} . sentiment :",
+        generator=tasks.json_examples(str(path)),
+        verbalizers=("terrible", "great"))
+    t = tasks.compile_task(spec, vocab=VOCAB, seq_len=SEQ)
+    d = t.make_dataset(6)
+    assert d["tokens"].shape == (6, SEQ - 1)
+    assert set(np.unique(d["class_labels"])) <= {0, 1}
+    # deterministic subsample
+    assert np.array_equal(d["tokens"], t.make_dataset(6)["tokens"])
+
+
+def _mc_spec(name, gen):
+    return tasks.TaskSpec(name=name, kind="multiple_choice",
+                          template="p : {premise} ?", generator=gen,
+                          answer_len=4)
+
+
+def test_multiple_choice_rejects_bad_choices():
+    """Ragged counts, empty choices, and over-length choices all fail
+    loudly at compile time: an all-PAD phantom continuation would
+    out-score real ones, and truncation merges distinct choices."""
+    ragged = _mc_spec("mc_ragged", lambda s, n: [
+        {"premise": "a b", "choices": ("x y", "z w"), "label": 0},
+        {"premise": "c d", "choices": ("x y",), "label": 0}][:n])
+    with pytest.raises(ValueError, match="choices"):
+        tasks.compile_task(ragged, VOCAB, 32).make_dataset(2)
+    empty = _mc_spec("mc_empty", lambda s, n: [
+        {"premise": "a b", "choices": ("x y", "  "), "label": 0}] * n)
+    with pytest.raises(ValueError, match="empty"):
+        tasks.compile_task(empty, VOCAB, 32).make_dataset(2)
+    overlong = _mc_spec("mc_long", lambda s, n: [
+        {"premise": "a b", "choices": ("x y", "one two three four five"),
+         "label": 0}] * n)
+    with pytest.raises(ValueError, match="answer_len"):
+        tasks.compile_task(overlong, VOCAB, 32).make_dataset(2)
+
+
+# -------------------------------------------------------------- metrics
+def test_accuracy_and_macro_f1_aggregates():
+    pred = np.array([0, 0, 1, 1, 2, 2])
+    gold = np.array([0, 1, 1, 1, 2, 0])
+    assert metrics.accuracy(pred, gold) == pytest.approx(4 / 6)
+    # hand-computed per-class F1: c0: tp1 fp1 fn1 -> 0.5; c1: tp2 fp0 fn1
+    # -> 0.8; c2: tp1 fp1 fn0 -> 2/3
+    assert metrics.macro_f1(pred, gold, 3) == pytest.approx(
+        (0.5 + 0.8 + 2 / 3) / 3)
+    assert metrics.macro_f1(gold, gold, 3) == 1.0
+    # absent class contributes zero, never NaN
+    assert np.isfinite(metrics.macro_f1(np.zeros(4, int), np.zeros(4, int), 3))
+
+
+def test_evaluate_protocols_run(params):
+    """Each scoring mode produces a finite value in [0, 1].  n=16 keeps
+    every forward at the same (16, S-1) shape, so the jitted scorer
+    compiles once and is shared across all three protocols (cb's macro-F1
+    aggregate is unit-tested above and rides the sst2 scoring path)."""
+    for name in ("sst2", "copa", "squad_copy"):
+        t = tasks.build(name, vocab=VOCAB, seq_len=SEQ)
+        d = t.make_dataset(16)
+        v = t.evaluate(MCFG, params, d, lm, max_examples=16)
+        assert 0.0 <= v <= 1.0, (name, v)
+
+
+def test_choice_scoring_prefers_planted_winner(params):
+    """Rig one choice's continuation to be the argmax-probable tokens —
+    scoring must pick it for every example."""
+    t = tasks.build("copa", vocab=VOCAB, seq_len=SEQ)
+    d = t.make_dataset(8)
+    ci, cl, cm = (d["choice_inputs"].copy(), d["choice_labels"].copy(),
+                  d["choice_mask"].copy())
+    logits = metrics._full_logits(MCFG, params, ci[:, 0], lm)
+    greedy = np.asarray(logits.argmax(-1))
+    # plant the greedy tokens as choice 0's continuation
+    mask0 = cm[:, 0] > 0
+    cl[:, 0][mask0] = greedy[mask0]
+    scores = metrics.choice_scores(MCFG, params, ci, cl, cm, lm)
+    assert (scores.argmax(-1) == 0).all()
+
+
+def test_exact_match_perfect_when_gold_is_greedy(params):
+    t = tasks.build("squad_copy", vocab=VOCAB, seq_len=SEQ)
+    d = t.make_dataset(8)
+    logits = metrics._full_logits(MCFG, params, d["tokens"], lm)
+    greedy = np.asarray(logits.argmax(-1))
+    labels = d["labels"].copy()
+    m = d["loss_mask"] > 0
+    labels[m] = greedy[m]
+    hits = metrics.exact_match_hits(MCFG, params, d["tokens"], labels,
+                                    d["loss_mask"], lm)
+    assert hits.mean() == 1.0
+    # and perturbing one gold token per row breaks EM for that row
+    labels2 = labels.copy()
+    for i in range(8):
+        j = np.argmax(d["loss_mask"][i])
+        labels2[i, j] = (labels2[i, j] + 1) % VOCAB
+    hits2 = metrics.exact_match_hits(MCFG, params, d["tokens"], labels2,
+                                     d["loss_mask"], lm)
+    assert hits2.mean() == 0.0

@@ -1,0 +1,83 @@
+"""Tier manifest: node-id patterns auto-marked ``slow`` by conftest.py.
+
+Tier-1 (`make test-fast`, `pytest -m "not slow"`) is the per-push CI
+gate and must stay under ~90s on an idle CPU; tier-2 (`make test`) is
+everything.  Tests land here when they measure over ~2-3s on the CI
+reference box (`pytest --durations=0`) — mostly convergence runs, the
+full kernel-backend x estimator matrices, decode-consistency sweeps,
+and the heavyweight arch smokes.
+
+Patterns are fnmatch'd against the full node id, so individual
+parametrized cases can be tiered while cheap siblings of the same test
+stay in tier-1 as representatives (e.g. ``two_point_bit_identical
+[False-dense]`` remains fast while the other seven cases are tier-2).
+Decorator ``@pytest.mark.slow`` still works and is preferred for tests
+that are slow by design (end-to-end training); this manifest exists so
+per-case tiering doesn't require rewriting parametrize lists.
+"""
+
+SLOW_NODE_PATTERNS = [
+    # -- end-to-end convergence / trainer runs
+    "tests/test_trainer.py::test_lezo_tracks_mezo",
+    "tests/test_trainer.py::test_zo_momentum_beats_zo_sgd",
+    "tests/test_trainer.py::test_lezo_converges",
+    "tests/test_trainer.py::test_quorum_still_converges",
+    "tests/test_trainer.py::test_fo_baseline_converges",
+    "tests/test_trainer.py::test_peft_runs_and_moves_loss[*]",
+    "tests/test_trainer.py::test_eval_accuracy_classification",
+    # -- arch smokes: every zoo config costs 4-40s to lower+run; the opt
+    #    stack itself is covered fast by the task/trainer/kernel tests
+    "tests/test_archs_smoke.py::test_arch_smoke[*",
+    # -- estimator subsystem: full matrices are tier-2; the cheapest
+    #    bit-identical case and the dense/bf16 kernel cases stay tier-1
+    "tests/test_estimators.py::test_trainer_selects_estimators",
+    "tests/test_estimators.py::test_one_sided_q_chunk_equivalent",
+    "tests/test_estimators.py::test_backend_matches_dense_per_estimator[one_sided-*",
+    "tests/test_estimators.py::test_backend_matches_dense_per_estimator[averaged-*",
+    "tests/test_estimators.py::test_backend_matches_dense_per_estimator[importance-1-scan]",
+    "tests/test_estimators.py::test_backend_matches_dense_per_estimator[importance-1-gather]",
+    "tests/test_estimators.py::test_backend_matches_dense_per_estimator[importance-1-pallas]",
+    "tests/test_estimators.py::test_backend_matches_dense_per_estimator[two_point-1-scan]",
+    "tests/test_estimators.py::test_backend_matches_dense_per_estimator[two_point-1-gather]",
+    "tests/test_estimators.py::test_backend_matches_dense_per_estimator[two_point-1-pallas]",
+    "tests/test_estimators.py::test_two_point_bit_identical_to_legacy[True-*",
+    "tests/test_estimators.py::test_two_point_bit_identical_to_legacy[False-gather]",
+    "tests/test_estimators.py::test_two_point_bit_identical_to_legacy[False-scan]",
+    "tests/test_estimators.py::test_averaged_q1_matches_two_point",
+    "tests/test_estimators.py::test_dropped_layers_untouched_under_estimators",
+    "tests/test_estimators.py::test_one_sided_converges_quadratic",
+    # -- distributed / sharding subprocess cells
+    "tests/test_sharding.py::test_dryrun_cell_subprocess",
+    "tests/test_distributed_train.py::test_dp_tp_training_matches_single_device",
+    # -- model stack: decode-consistency sweeps and chunk invariances
+    "tests/test_models.py::test_mlstm_chunk_invariance",
+    "tests/test_models.py::test_mamba_chunk_invariance",
+    "tests/test_models.py::test_flash_key_padding_with_prefix_offset",
+    "tests/test_models.py::test_multi_step_decode_matches_train",
+    "tests/test_models.py::test_decode_consistency_dense",
+    "tests/test_models.py::test_decode_consistency_xlstm",
+    "tests/test_models.py::test_decode_consistency_mla",
+    "tests/test_models.py::test_decode_consistency_moe_dropless",
+    "tests/test_models.py::test_decode_consistency_mamba",
+    "tests/test_models.py::test_chunked_ce_matches_dense",
+    "tests/test_models.py::test_flash_matches_naive[*",
+    "tests/test_moe.py::test_dispatch_matches_dense_oracle",
+    "tests/test_moe.py::test_single_token_never_drops",
+    "tests/test_moe.py::test_shared_experts_added",
+    "tests/test_moe.py::test_capacity_drop_bounded",
+    "tests/test_zo_adaptive.py::test_momentum_matches_explicit_buffer",
+    "tests/test_peft.py::test_prefix_changes_forward",
+    # -- ZO core / kernels: the scan sweeps and the 64Ki boundary tiles;
+    #    gather/pallas/dense cases stay tier-1 as backend representatives
+    "tests/test_zo.py::test_fused_equals_unfused[*",
+    "tests/test_zo.py::test_perturb_restore_identity",
+    "tests/test_kernels.py::test_backend_matches_dense[scan-float32-*",
+    "tests/test_kernels.py::test_backend_matches_dense[scan-bfloat16-*",
+    "tests/test_kernels.py::test_backend_matches_dense[gather-float32-*",
+    # ragged/boundary tiles are pinned fast by test_kernels_golden.py
+    "tests/test_kernels.py::test_pallas_tile_boundaries[*",
+    "tests/test_rng.py::test_layer_ids_subset",
+    "tests/test_estimators.py::test_one_sided_bias_quadratic",
+    "tests/test_flash_kernel.py::test_flash_kernel_matches_ref[float32-True-3-64-32-64-32]",
+    "tests/test_flash_kernel.py::test_flash_kernel_matches_model_flash",
+]
