@@ -2,7 +2,8 @@
 #   make test-fast   - tier-1: every test not marked `slow` (<~90s on CPU);
 #                      this is what .github/workflows/ci.yml runs per push
 #   make test        - tier-2: the full suite (the ROADMAP.md verify command)
-#   make bench-smoke - fast estimator-sweep benchmark on CPU interpret mode
+#   make bench-smoke - fast estimator-sweep + fused-runtime benchmarks on
+#                      CPU (interpret-mode kernels); writes BENCH_fused.json
 #   make lint        - bytecode-compile everything (+ ruff when installed)
 
 PY ?= python
@@ -18,6 +19,7 @@ test-fast:
 
 bench-smoke:
 	$(PY) benchmarks/estimator_sweep.py --smoke
+	$(PY) benchmarks/fused_forward.py --smoke --json BENCH_fused.json
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

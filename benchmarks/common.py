@@ -1,6 +1,8 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import platform
 import sys
 import time
 from pathlib import Path
@@ -55,3 +57,27 @@ def emit(rows):
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     return rows
+
+
+def rows_to_json(rows):
+    """The emit() row triples as JSON-ready dicts."""
+    return [{"name": n, "us_per_call": float(us), "derived": str(d)}
+            for n, us, d in rows]
+
+
+def write_json(path, payload):
+    """Write a BENCH_*.json trajectory file with environment metadata."""
+    payload = dict(payload)
+    payload.setdefault("meta", {})
+    payload["meta"].update({
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+    })
+    p = Path(path)
+    if p.parent != Path("."):
+        p.parent.mkdir(parents=True, exist_ok=True)
+    with open(p, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {path}")
+    return payload

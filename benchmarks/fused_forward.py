@@ -1,0 +1,111 @@
+"""Virtual-perturbation fused runtime: materialized vs virtual step time.
+
+A materialized two_point step is 2 forwards + 3 parameter axpy sweeps
+(perturb, perturb, fused restore+update); the virtual backend
+(``repro.fused``, DESIGN.md §10) evaluates both probes against
+in-kernel-regenerated perturbed weights, so the step is 2 (slightly
+heavier) forwards + 1 update sweep.  This benchmark times full optimizer
+steps at LeZO sparsity rho in {0, 0.5, 0.75} and writes the
+``BENCH_fused.json`` trajectory (``--json``; CI uploads it).
+
+On CPU the virtual rows use the pure-JAX oracle (``virtual_ref`` — the
+same floats the Pallas kernels produce, which the test suite pins in
+interpret mode); timing the Pallas *interpreter* would measure the
+emulator, not the kernel, so the kernel path gets a single microbench
+row for reference instead.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent))
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from benchmarks.common import (bench_model, emit, make_batch, rows_to_json,  # noqa: E402
+                               timeit, write_json)
+from repro import estimators  # noqa: E402
+from repro.core import zo  # noqa: E402
+from repro.estimators import costs  # noqa: E402
+from repro.fused import matmul as fused_matmul  # noqa: E402
+from repro.fused import ref as fused_ref  # noqa: E402
+from repro.models import lm  # noqa: E402
+
+RHOS = (0.0, 0.5, 0.75)
+
+
+def _step(mcfg, n_drop, forward_backend):
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    spec = zo.build_spec(params, lm.zo_group_fn)
+    ecfg = estimators.EstimatorConfig(name="two_point", n_drop=n_drop,
+                                      lr=1e-4, eps=1e-3,
+                                      forward_backend=forward_backend)
+    loss_fn = lambda p, b, perturb=None: lm.lm_loss(mcfg, p, b,
+                                                    perturb=perturb)
+    step, init = estimators.make_step(loss_fn, spec, ecfg)
+    return params, jax.jit(step), init
+
+
+def run(smoke=False, json_path=None):
+    mcfg, seq = bench_model()
+    batch = make_batch(mcfg, 8 if smoke else 16, seq)
+    iters = 3 if smoke else 5
+    rows, cells = [], []
+    for rho in RHOS:
+        n_drop = int(rho * mcfg.num_layers)
+        times = {}
+        for fb in ("materialized", "virtual_ref"):
+            params, step, init = _step(mcfg, n_drop, fb)
+            t = timeit(lambda: step(params, init(), batch, jnp.int32(0),
+                                    jnp.uint32(1)), warmup=1, iters=iters)
+            times[fb] = t
+            sweeps = costs.step_counts("two_point",
+                                       forward_backend=fb)["axpy_sweeps"]
+            rows.append((f"steptime_{fb}_rho{rho:g}", t * 1e6,
+                         f"axpy_sweeps={sweeps}"))
+        speedup = times["materialized"] / times["virtual_ref"]
+        rows.append((f"virtual_speedup_rho{rho:g}", 0.0, f"{speedup:.2f}x"))
+        cells.append({"rho": rho,
+                      "materialized_s": times["materialized"],
+                      "virtual_s": times["virtual_ref"],
+                      "speedup": speedup})
+
+    # Pallas kernel reference point: one fused pmatmul tile pass in
+    # interpret mode vs its oracle (numbers are emulator-bound on CPU).
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 512), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (128, 512), jnp.float32)
+    seed = jnp.uint32(7)
+    t_k = timeit(lambda: fused_matmul.pmatmul(x, w, seed, 1e-3,
+                                              interpret=True),
+                 warmup=1, iters=iters)
+    t_r = timeit(jax.jit(lambda: fused_ref.pmatmul(x, w, seed, 1e-3)),
+                 warmup=1, iters=iters)
+    rows.append(("pmatmul_pallas_interpret_512", t_k * 1e6,
+                 "emulator-bound on CPU"))
+    rows.append(("pmatmul_ref_512", t_r * 1e6, "oracle (XLA-compiled)"))
+
+    emit(rows)
+    if json_path:
+        write_json(json_path, {
+            "bench": "fused_forward",
+            "model": mcfg.name,
+            "impl": "virtual_ref on CPU (kernel pinned vs oracle by "
+                    "tests/test_fused.py in interpret mode)",
+            "cells": cells,
+            "rows": rows_to_json(rows),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the BENCH_fused.json trajectory here")
+    args = ap.parse_args()
+    run(smoke=args.smoke, json_path=args.json)

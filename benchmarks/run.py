@@ -1,10 +1,14 @@
 """Benchmark harness: one entry per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  See DESIGN.md §5 for the
-paper-artifact mapping.
+paper-artifact mapping.  ``--json PATH`` additionally writes the full
+trajectory (every module's rows + environment metadata) as one JSON
+file, the format CI archives (e.g. BENCH_fused.json from
+benchmarks/fused_forward.py).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 from pathlib import Path
 
@@ -13,14 +17,24 @@ sys.path.insert(0, str(Path(__file__).parent.parent))
 
 
 def main() -> None:
-    from benchmarks import (accuracy, estimator_sweep, peft, roofline,
-                            sparsity_sweep, speedup, stage_breakdown,
-                            token_length, zo_momentum)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all rows as a JSON trajectory file")
+    args = ap.parse_args()
+
+    from benchmarks import (accuracy, common, estimator_sweep, fused_forward,
+                            peft, roofline, sparsity_sweep, speedup,
+                            stage_breakdown, token_length, zo_momentum)
     print("name,us_per_call,derived")
-    for mod in (stage_breakdown, speedup, sparsity_sweep, token_length,
-                accuracy, peft, zo_momentum, estimator_sweep, roofline):
+    results = {}
+    for mod in (stage_breakdown, fused_forward, speedup, sparsity_sweep,
+                token_length, accuracy, peft, zo_momentum, estimator_sweep,
+                roofline):
         print(f"# --- {mod.__name__} ---")
-        mod.run()
+        rows = mod.run()
+        results[mod.__name__.split(".")[-1]] = common.rows_to_json(rows)
+    if args.json:
+        common.write_json(args.json, {"bench": "all", "modules": results})
 
 
 if __name__ == "__main__":

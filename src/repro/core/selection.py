@@ -53,16 +53,30 @@ def weighted_active(seed, weights, n_drop: int):
     ``weights`` (num_layers,) >= 0 — e.g. running |projected_grad|
     attribution per layer.  Layers with larger weight are kept more often,
     LISA-style, while remaining fully stochastic.
+
+    Selection is an argsort top-k mask (like :func:`uniform_active`), not
+    a score threshold: thresholding selects more than k layers when
+    scores tie (the 24-bit Gumbel draws do collide) and indexes out of
+    bounds at k == 0.  ``n_drop == num_layers`` is allowed here (empty
+    mask) so callers composing with always-on leaf groups can express
+    "drop every stacked layer".
     """
     num_layers = weights.shape[0]
+    if not 0 <= n_drop <= num_layers:
+        raise ValueError(
+            f"n_drop must be in [0, {num_layers}], got {n_drop}")
     k = num_layers - n_drop
+    if k == 0:
+        return jnp.zeros((num_layers,), jnp.bool_)
+    if n_drop == 0:
+        return jnp.ones((num_layers,), jnp.bool_)
     ids = jnp.arange(num_layers, dtype=jnp.uint32)
     bits = rng.mix32(ids * jnp.uint32(0x9E3779B9) + rng.fold(seed, jnp.uint32(_SALT + 1)))
     u = (bits >> jnp.uint32(8)).astype(jnp.float32) / jnp.float32(1 << 24)
     gumbel = -jnp.log(-jnp.log(jnp.clip(u, 1e-7, 1.0 - 1e-7)))
     score = jnp.log(jnp.clip(weights, 1e-9, None)) + gumbel
-    thresh = jnp.sort(score)[num_layers - k]
-    return score >= thresh
+    order = jnp.argsort(-score)
+    return jnp.zeros((num_layers,), jnp.bool_).at[order[:k]].set(True)
 
 
 def make_policy(name: str, num_layers: int, n_drop: int):

@@ -213,6 +213,11 @@ class ZOConfig:
     fused_update: bool = True     # beyond-paper single restore+update pass
     weight_decay: float = 0.0
     interpret: bool = True        # pallas interpret mode (CPU container)
+    # materialized = classic perturb/forward/restore sweeps;
+    # virtual[_ref] = fused forward regenerates z in-kernel, the step is
+    # 2 forwards + 1 update axpy with zero perturb/restore writes
+    # (repro.fused, DESIGN.md §10)
+    forward_backend: str = "materialized"
 
 
 def make_zo_step(loss_fn: Callable, spec: ZOSpec, cfg: ZOConfig,

@@ -49,6 +49,10 @@ def build_estimator(spec: zo.ZOSpec, cfg: EstimatorConfig,
             f"unknown estimator {cfg.name!r}; pick from {ESTIMATORS}")
     if cfg.q < 1:
         raise ValueError(f"q must be >= 1, got {cfg.q}")
+    if cfg.forward_backend not in costs.FORWARD_BACKENDS:
+        raise ValueError(
+            f"unknown forward_backend {cfg.forward_backend!r}; pick from "
+            f"{costs.FORWARD_BACKENDS}")
     return REGISTRY[cfg.name](spec, cfg, select_fn=select_fn)
 
 
@@ -59,7 +63,9 @@ def from_zo(zo_cfg, name: str = "two_point", q: int = 1,
         name=name, eps=zo_cfg.eps, lr=zo_cfg.lr, q=q, n_drop=zo_cfg.n_drop,
         policy=zo_cfg.policy, backend=zo_cfg.backend,
         fused_update=zo_cfg.fused_update, weight_decay=zo_cfg.weight_decay,
-        interpret=zo_cfg.interpret, **kw)
+        interpret=zo_cfg.interpret,
+        forward_backend=getattr(zo_cfg, "forward_backend", "materialized"),
+        **kw)
 
 
 def make_step(loss_fn: Callable, spec: zo.ZOSpec, cfg: EstimatorConfig,

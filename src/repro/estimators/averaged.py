@@ -32,11 +32,17 @@ class AveragedSPSA(Estimator):
         for s in seeds:
             m, ix, na = self.select(s, state)
             n_active = na if n_active is None else n_active
-            p = self._ax(p, cfg.eps, s, m, ix)
-            l_plus = loss_fn(p, batch)
-            p = self._ax(p, -2.0 * cfg.eps, s, m, ix)
-            l_minus = loss_fn(p, batch)
-            p = self._ax(p, cfg.eps, s, m, ix)    # restore before next probe
+            if self.virtual:
+                # probe pair through the fused forward: no perturb, no
+                # restore-before-next-probe — params never move here
+                l_plus = self._vloss(loss_fn, p, batch, s, cfg.eps, m)
+                l_minus = self._vloss(loss_fn, p, batch, s, -cfg.eps, m)
+            else:
+                p = self._ax(p, cfg.eps, s, m, ix)
+                l_plus = loss_fn(p, batch)
+                p = self._ax(p, -2.0 * cfg.eps, s, m, ix)
+                l_minus = loss_fn(p, batch)
+                p = self._ax(p, cfg.eps, s, m, ix)  # restore before next
             g = (l_plus - l_minus) / (2.0 * cfg.eps)
             coeffs.append(g / q)
             masks.append(m)

@@ -54,6 +54,11 @@ class EstimatorConfig:
     interpret: bool = True        # pallas interpret mode (CPU container)
     inner: str = "two_point"      # estimator the importance wrapper drives
     importance_decay: float = 0.99  # EMA for the per-layer |g| scores
+    # materialized | virtual | virtual_ref — virtual probes evaluate
+    # loss(theta + s*eps*z) through the fused forward (repro.fused): the
+    # loss_fn must accept a ``perturb`` kwarg (models.lm.lm_loss does)
+    # and the step performs zero perturb/restore parameter writes
+    forward_backend: str = "materialized"
 
 
 @dataclasses.dataclass
@@ -127,6 +132,19 @@ class Estimator:
                             decay=decay, backend=backend or self.cfg.backend,
                             interpret=self.cfg.interpret)
 
+    # -------------------------------------------------- virtual probing
+    @property
+    def virtual(self) -> bool:
+        return self.cfg.forward_backend != "materialized"
+
+    def _vloss(self, loss_fn, params, batch, seed, scale, masks):
+        """Probe loss(theta + scale*z(seed)) with zero parameter writes:
+        the fused forward regenerates z in its kernels (repro.fused)."""
+        from repro import fused  # local: fused must stay import-light here
+        ctx = fused.make_ctx(seed, scale, masks, self.cfg.forward_backend,
+                             interpret=self.cfg.interpret)
+        return loss_fn(params, batch, perturb=ctx)
+
     # --------------------------------------------------------- protocol
     def estimate(self, loss_fn, params, batch, seed, state):
         """Probe the loss.  -> (probed_params, DirectionSet, metrics).
@@ -164,4 +182,5 @@ class Estimator:
         return costs.step_counts(self.cfg.name, q=self.cfg.q,
                                  fused_update=self.cfg.fused_update,
                                  inner=self.cfg.inner,
-                                 num_layers=self.spec.num_layers)
+                                 num_layers=self.spec.num_layers,
+                                 forward_backend=self.cfg.forward_backend)

@@ -55,6 +55,12 @@ class OneSidedBatched(Estimator):
                           for g in masks[0]} if masks[0] else {})
 
         def probe(seed_i, masks_i):
+            if self.virtual:
+                # q probes are q *seeds* of the same weights: the vmapped
+                # fused forward regenerates each z_i in-kernel, so no
+                # widened (q, params) perturbed copies ever exist
+                return self._vloss(loss_fn, params, batch, seed_i,
+                                   cfg.eps, masks_i)
             p = zo.tree_axpy(params, self.spec, seed_i, cfg.eps, masks_i,
                              None, backend="dense", interpret=cfg.interpret)
             return loss_fn(p, batch)

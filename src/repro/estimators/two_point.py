@@ -19,13 +19,23 @@ class TwoPointSPSA(Estimator):
     def estimate(self, loss_fn, params, batch, seed, state):
         cfg = self.cfg
         masks, idxs, n_active = self.select(seed, state)
-        p = self._ax(params, cfg.eps, seed, masks, idxs)
-        l_plus = loss_fn(p, batch)
-        p = self._ax(p, -2.0 * cfg.eps, seed, masks, idxs)
-        l_minus = loss_fn(p, batch)
+        if self.virtual:
+            # fused forward: same z, same floats, zero parameter writes —
+            # the step collapses to 2 forwards + the single update axpy
+            l_plus = self._vloss(loss_fn, params, batch, seed, cfg.eps,
+                                 masks)
+            l_minus = self._vloss(loss_fn, params, batch, seed, -cfg.eps,
+                                  masks)
+            p, restore = params, 0.0
+        else:
+            p = self._ax(params, cfg.eps, seed, masks, idxs)
+            l_plus = loss_fn(p, batch)
+            p = self._ax(p, -2.0 * cfg.eps, seed, masks, idxs)
+            l_minus = loss_fn(p, batch)
+            restore = cfg.eps
         g = (l_plus - l_minus) / (2.0 * cfg.eps)
         dirs = DirectionSet(seeds=(jnp.asarray(seed, jnp.uint32),),
-                            coeffs=(g,), restore=(cfg.eps,),
+                            coeffs=(g,), restore=(restore,),
                             masks=(masks,), idxs=(idxs,))
         metrics = {
             "loss": 0.5 * (l_plus + l_minus),

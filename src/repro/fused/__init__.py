@@ -1,0 +1,55 @@
+"""Virtual-perturbation fused forward runtime (DESIGN.md §10).
+
+MeZO/LeZO spend >50% of step time sweeping parameters: perturb(+eps),
+perturb(-2eps), restore, update.  But with a counter-based RNG, z is a
+pure function of (seed, leaf, layer, element) — so the perturbed weights
+``theta + s*eps*z`` never need to exist in HBM: the forward pass can
+regenerate z inside its matmul tiles and compute ``x @ (W + s*eps*z)``
+on the fly.  A two-point ZO step becomes exactly
+
+    2 virtual forwards + 1 fused update axpy
+
+with zero perturb/restore parameter writes, which composes
+multiplicatively with LeZO's per-layer skip (the kernels carry the
+active predicate) and with the batched estimators in ``repro.estimators``
+(one_sided's q probes are q *seeds* of the same weights — no widened
+parameter copies).
+
+Pieces:
+  * ``ref``      — pure-JAX oracle + the z-consistency contract with
+                   ``kernels/ops.py`` (same streams as the axpy sweeps).
+  * ``pmatmul``  — the Pallas TPU kernel (interpret-mode CPU fallback).
+  * ``view``     — PerturbCtx / LayerPerturb lens the model forward
+                   consumes (``lm.lm_loss(..., perturb=ctx)``).
+  * ``sharded``  — shard_map wrappers with global counter offsets.
+
+Select it with ``forward_backend="virtual"`` (Pallas) or
+``"virtual_ref"`` (oracle, pjit-shardable) on ZOConfig / EstimatorConfig
+/ TrainConfig; ``"materialized"`` is the classic perturb-restore path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.estimators.costs import FORWARD_BACKENDS
+from repro.fused import ref
+from repro.fused.matmul import pmatmul
+from repro.fused.sharded import pmatmul_col_sharded, pmatmul_row_sharded
+from repro.fused.view import IMPLS, LayerPerturb, PerturbCtx
+
+__all__ = ["FORWARD_BACKENDS", "IMPLS", "LayerPerturb", "PerturbCtx",
+           "make_ctx", "pmatmul", "pmatmul_col_sharded",
+           "pmatmul_row_sharded", "ref"]
+
+
+def make_ctx(seed, scale, masks, forward_backend: str,
+             interpret: bool = True) -> PerturbCtx:
+    """Build the perturbation lens for one probe of ``forward_backend``."""
+    if forward_backend not in FORWARD_BACKENDS[1:]:
+        raise ValueError(
+            f"not a virtual forward backend: {forward_backend!r}; "
+            f"pick from {FORWARD_BACKENDS[1:]}")
+    impl = "ref" if forward_backend == "virtual_ref" else "pallas"
+    return PerturbCtx(seed=jnp.asarray(seed, jnp.uint32),
+                      scale=jnp.asarray(scale, jnp.float32),
+                      masks=masks, impl=impl, interpret=interpret)

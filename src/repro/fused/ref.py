@@ -1,0 +1,117 @@
+"""Pure-JAX oracle for the virtual-perturbation fused forward.
+
+Virtual perturbation evaluates ``loss(theta + s*eps*z)`` without ever
+writing ``theta + s*eps*z`` into the parameter buffers: every weight
+consumer regenerates its slice of ``z`` on the fly from the same counter
+RNG the perturb/restore/update axpy sweeps use (``kernels/ops.py``), so a
+virtual probe loss is made of the *same float ops* as the materialized
+perturb -> forward -> restore sequence — only the two parameter sweeps
+around the forward disappear.
+
+z-consistency contract (shared bit-for-bit with ``kernels.ops.zo_axpy``):
+
+    leaf_seed  = fold(step_seed, leaf_uid(path))    # path = tree-path str
+    layer_seed = fold(leaf_seed, l)                 # l = 0 for unstacked
+    z[i, ...]  = counter_normal(layer_seed, flat_index_within_layer)
+
+Everything here is element-wise jnp over broadcasted iotas plus the
+model's own matmul, so the oracle lowers anywhere, shards under pjit with
+zero communication (each device generates exactly its shard of z — the
+property ``kernels/ref.py`` established for the axpy), and serves as the
+numerical reference the Pallas kernels in ``fused/matmul.py`` are
+property-tested against.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import rng
+from repro.kernels import ref as kref
+
+F32 = jnp.float32
+
+
+def layer_seed(step_seed, path: str, layer=0):
+    """Per-(leaf, layer) RNG seed under the z-consistency contract."""
+    ls = rng.fold(jnp.asarray(step_seed, jnp.uint32),
+                  jnp.uint32(rng.leaf_uid(path)))
+    return rng.fold(ls, jnp.asarray(layer, jnp.uint32))
+
+
+def zmat(seed, m: int, n: int, *, row0=0, col0=0, ld=None, trans=False):
+    """z for an (m, n) window of a stored weight matrix.
+
+    Counters follow the *stored* leaf layout so shards and views agree
+    with the axpy sweeps: window element (i, j) has counter
+    ``(row0+i)*ld + (col0+j)``.  ``trans=True`` means the window is read
+    through a transpose of the stored leaf (the tied LM head consuming
+    ``embed/tok.T``): counter = ``(col0+j)*ld + (row0+i)``.  ``ld`` is
+    the stored row length (defaults to the window's own: n, or m when
+    trans).  ``row0``/``col0`` may be traced (shard offsets).
+    """
+    rows = (jnp.asarray(row0, jnp.uint32)
+            + lax.broadcasted_iota(jnp.uint32, (m, n), 0))
+    cols = (jnp.asarray(col0, jnp.uint32)
+            + lax.broadcasted_iota(jnp.uint32, (m, n), 1))
+    if trans:
+        idx = cols * jnp.uint32(m if ld is None else ld) + rows
+    else:
+        idx = rows * jnp.uint32(n if ld is None else ld) + cols
+    return rng.counter_normal(seed, idx)
+
+
+def _eff_scale(scale, active):
+    """Fold the LeZO predicate into the scalar scale: inactive layers add
+    ``0 * z`` (exact — z is finite), a scalar select instead of a
+    weight-sized one, so XLA never runs a full select pass per matmul."""
+    s = jnp.asarray(scale, F32)
+    if active is None:
+        return s
+    return jnp.where(active, s, jnp.zeros((), F32))
+
+
+def pvec(w, seed, scale, active=None):
+    """Virtually perturbed small leaf (norm scale/bias, any shape).
+
+    Returns ``(w + scale*z)`` rounded to ``w.dtype`` — the identical
+    floats the materialized axpy writes — as an O(w.size) temp, never a
+    parameter-buffer write.  ``active`` (scalar bool) is the LeZO
+    per-layer predicate.
+    """
+    idx = kref._within_layer_index((1,) + w.shape)[0]
+    z = rng.counter_normal(seed, idx)
+    return (w.astype(F32) + _eff_scale(scale, active) * z).astype(w.dtype)
+
+
+def pmatmul(x, w, seed, scale, active=None, *, trans=False, ld=None,
+            row0=0, col0=0):
+    """``x @ (w + scale*z)`` with z regenerated — the oracle for the
+    Pallas kernel.  ``w``: (K, N); ``x``: (..., K)."""
+    z = zmat(seed, w.shape[0], w.shape[1], row0=row0, col0=col0, ld=ld,
+             trans=trans)
+    weff = (w.astype(F32) + _eff_scale(scale, active) * z).astype(w.dtype)
+    return x @ weff
+
+
+def pembed(tok_w, tokens, seed, scale):
+    """Perturbed embedding lookup: gather first, then add z only for the
+    looked-up rows — the z slice is activation-sized, never (V, D)."""
+    D = tok_w.shape[-1]
+    rows = tok_w[tokens]
+    idx = (tokens.astype(jnp.uint32)[..., None] * jnp.uint32(D)
+           + jnp.arange(D, dtype=jnp.uint32))
+    z = rng.counter_normal(seed, idx)
+    return (rows.astype(F32) + jnp.asarray(scale, F32) * z).astype(
+        tok_w.dtype)
+
+
+def ppos(pos_w, pos, S: int, seed, scale):
+    """Perturbed learned-position rows ``pos_w[pos:pos+S]``."""
+    D = pos_w.shape[-1]
+    rows = lax.dynamic_slice_in_dim(pos_w, pos, S, 0)
+    r = jnp.asarray(pos, jnp.uint32) + jnp.arange(S, dtype=jnp.uint32)
+    idx = r[:, None] * jnp.uint32(D) + jnp.arange(D, dtype=jnp.uint32)
+    z = rng.counter_normal(seed, idx)
+    return (rows.astype(F32) + jnp.asarray(scale, F32) * z).astype(
+        pos_w.dtype)

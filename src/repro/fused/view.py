@@ -1,0 +1,92 @@
+"""PerturbView lens: thread virtual perturbation through a forward pass.
+
+A :class:`PerturbCtx` is the whole perturbation — (seed, scale, LeZO
+masks) plus static impl flags — created per probe inside the estimator's
+trace and handed to ``models.lm.lm_loss(..., perturb=ctx)``.  The model
+derives a :class:`LayerPerturb` handle per (block, layer) as its stage
+scan walks the stacked parameters; the handle knows the leaf-path prefix
+(static string), the layer index within the stacked axis-0 (traced) and
+the layer's active predicate (traced bool), which is everything needed to
+reproduce the exact per-leaf z streams of the axpy sweeps
+(fused/ref.py's z-consistency contract).
+
+``impl="pallas"`` routes matmuls through the fused kernel
+(fused/matmul.py, interpret mode on CPU); ``impl="ref"`` uses the
+pure-JAX oracle — same floats, ordinary XLA ops, shards under pjit.
+Vector-sized leaves (norm scale/bias) always use the oracle: an O(D)
+temp is activation-sized, and a kernel launch would cost more than the
+add.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.fused import matmul as pk
+from repro.fused import ref as fref
+
+IMPLS = ("pallas", "ref")
+
+
+@dataclasses.dataclass(frozen=True)
+class PerturbCtx:
+    """One virtual perturbation: theta + scale * z(seed) on active layers."""
+    seed: Any                       # traced uint32 direction seed
+    scale: Any                      # traced f32: sign * eps
+    masks: Optional[Dict[str, Any]]  # group -> (L_g,) bool; None = all on
+    impl: str = "pallas"            # pallas | ref      (static)
+    interpret: bool = True          # pallas interpret mode (static)
+
+    def group_mask(self, group: str, L: int):
+        if self.masks is None or group not in self.masks:
+            return jnp.ones((L,), jnp.bool_)
+        return self.masks[group]
+
+    def leaf(self, path: str) -> "LayerPerturb":
+        """Handle for an always-perturbed unstacked leaf (embeddings,
+        head, final norm — the leaves LeZO never drops)."""
+        return LayerPerturb(self, path, jnp.uint32(0), jnp.bool_(True))
+
+    def block(self, prefix: str, layer, active) -> "LayerPerturb":
+        """Handle for layer ``layer`` of the stacked block at ``prefix``."""
+        return LayerPerturb(self, prefix, layer, active)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPerturb:
+    ctx: PerturbCtx
+    prefix: str                     # static leaf-path prefix
+    layer: Any                      # traced uint32 index into stacked axis 0
+    active: Any                     # traced bool: LeZO predicate
+
+    def child(self, name: str) -> "LayerPerturb":
+        return dataclasses.replace(self, prefix=self._p(name))
+
+    def _p(self, name: str) -> str:
+        if self.prefix and name:
+            return f"{self.prefix}/{name}"
+        return self.prefix or name
+
+    def _seed(self, name: str):
+        return fref.layer_seed(self.ctx.seed, self._p(name), self.layer)
+
+    def matmul(self, x, w, name: str = "", *, trans: bool = False,
+               ld: Optional[int] = None):
+        """``x @ (w + scale*z)`` for the leaf at ``prefix/name``."""
+        seed = self._seed(name)
+        if self.ctx.impl == "ref":
+            return fref.pmatmul(x, w, seed, self.ctx.scale, self.active,
+                                trans=trans, ld=ld)
+        return pk.pmatmul(x, w, seed, self.ctx.scale, self.active,
+                          trans=trans, ld=ld, interpret=self.ctx.interpret)
+
+    def vec(self, w, name: str = ""):
+        """Virtually perturbed vector-sized leaf (norm scale/bias)."""
+        return fref.pvec(w, self._seed(name), self.ctx.scale, self.active)
+
+    def norm(self, p: Dict[str, Any], name: str = "") -> Dict[str, Any]:
+        """Perturbed view of a norm param dict ({scale[, bias]})."""
+        sub = self.child(name) if name else self
+        return {k: sub.vec(v, k) for k, v in p.items()}

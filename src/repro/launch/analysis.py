@@ -329,7 +329,8 @@ _HBM_BW_DEFAULT = 819e9  # TPU v5e bytes/s — matches launch/dryrun.py
 def estimator_step_cost(terms: Dict, name: str, q: int = 1,
                         param_bytes: Optional[float] = None,
                         fused_update: bool = True,
-                        hbm_bw: float = _HBM_BW_DEFAULT) -> Dict:
+                        hbm_bw: float = _HBM_BW_DEFAULT,
+                        forward_backend: str = "materialized") -> Dict:
     """Project lowered-step roofline terms onto a different ZO estimator.
 
     The train graph we lower and cost (launch/specs.py) is a fused
@@ -344,16 +345,23 @@ def estimator_step_cost(terms: Dict, name: str, q: int = 1,
         re-priced exactly: each sweep moves ~2x the active parameter
         bytes through HBM.  Without it, memory scales with forwards and
         the sweep counts are still reported for the caller.
+
+    ``forward_backend="virtual"``/``"virtual_ref"`` prices the fused
+    runtime (DESIGN.md §10): probe sweeps vanish from the counts, so with
+    ``param_bytes`` the perturb+update share of memory time collapses to
+    the single update sweep.
     """
     from repro.estimators import costs  # pure-python counts, no jax
 
     base = costs.step_counts(costs.BASELINE, fused_update=True)
-    est = costs.step_counts(name, q=q, fused_update=fused_update)
+    est = costs.step_counts(name, q=q, fused_update=fused_update,
+                            forward_backend=forward_backend)
     f = est["forwards"] / base["forwards"]
     # scaled times + counts only: copying the raw hlo_flops/bytes fields
     # through unscaled would contradict the scaled *_s terms
     out = {"estimator": name, "q": q, "forwards": est["forwards"],
-           "axpy_sweeps": est["axpy_sweeps"]}
+           "axpy_sweeps": est["axpy_sweeps"],
+           "forward_backend": forward_backend}
     out["compute_s"] = terms["compute_s"] * f
     out["collective_s"] = terms["collective_s"] * f
     if param_bytes:

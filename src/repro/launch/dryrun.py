@@ -137,7 +137,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              variant: str = "optimized", verbose: bool = True,
              hlo_dir: str = None, overrides: dict = None,
-             estimator: str = "two_point", q: int = 1):
+             estimator: str = "two_point", q: int = 1,
+             forward_backend: str = "materialized"):
     t0 = time.time()
     cfg, shape, mesh, lowered, compiled = lower_cell(
         arch, shape_name, multi_pod, variant, overrides)
@@ -168,9 +169,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                "output_bytes": ma.output_size_in_bytes,
                "temp_bytes": ma.temp_size_in_bytes,
                "alias_bytes": ma.alias_size_in_bytes}
+    from repro.estimators import costs as est_costs
     rec = {
         "arch": arch, "shape": shape_name, "variant": variant,
         "estimator": estimator, "q": q,
+        "forward_backend": forward_backend,
+        # analytic sweep/forward counts for the configured step (the
+        # lowered graph itself is always the materialized two_point
+        # baseline; see analysis.estimator_step_cost for projection)
+        "step_counts": est_costs.step_counts(
+            estimator, q=q, forward_backend=forward_backend),
         "mesh": "pod2x16x16" if multi_pod else "16x16",
         "n_chips": int(n_chips),
         "compile_s": round(time.time() - t0, 1),
@@ -206,6 +214,10 @@ def main():
                     help="estimator assumed for the model-FLOPs column")
     ap.add_argument("--q", type=int, default=1,
                     help="directions per step for one_sided / averaged")
+    from repro.estimators.costs import FORWARD_BACKENDS  # noqa: E402
+    ap.add_argument("--forward-backend", default="materialized",
+                    choices=list(FORWARD_BACKENDS),
+                    help="assumed for the analytic step_counts column")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true",
@@ -232,7 +244,7 @@ def main():
         try:
             rec = run_cell(arch, shape_name, mp, args.variant,
                            hlo_dir=args.save_hlo, estimator=args.estimator,
-                           q=args.q)
+                           q=args.q, forward_backend=args.forward_backend)
             results.append(rec)
             tag = f"{arch}_{shape_name}_{'mp' if mp else 'sp'}_{args.variant}"
             with open(os.path.join(args.out, tag + ".json"), "w") as f:

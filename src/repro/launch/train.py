@@ -13,6 +13,7 @@ import json
 from repro import configs
 from repro import tasks as tasks_mod
 from repro.core import zo
+from repro.estimators import costs as est_costs
 from repro.data import synthetic
 from repro.train.trainer import Trainer, TrainConfig
 
@@ -40,6 +41,12 @@ def main():
                     help="LeZO fraction of layers dropped per step")
     ap.add_argument("--backend", default="scan",
                     choices=["dense", "scan", "gather", "pallas"])
+    ap.add_argument("--forward-backend", default="materialized",
+                    choices=list(est_costs.FORWARD_BACKENDS),
+                    help="materialized = classic perturb/restore sweeps; "
+                         "virtual = fused forward regenerates z in-kernel "
+                         "(Pallas; virtual_ref = pure-JAX oracle), so a ZO "
+                         "step writes params once (repro.fused)")
     ap.add_argument("--peft", default=None, choices=[None, "lora", "prefix"])
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--ckpt-dir", default=None)
@@ -65,14 +72,17 @@ def main():
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         quorum=args.quorum, n_loss_shards=args.loss_shards,
         peft=args.peft, seed=args.seed, eval_every=max(1, args.steps // 4),
-        estimator=args.estimator, est_q=args.q)
+        estimator=args.estimator, est_q=args.q,
+        forward_backend=args.forward_backend)
     zcfg = zo.ZOConfig(eps=args.eps, lr=args.lr, n_drop=n_drop,
-                       backend=args.backend)
+                       backend=args.backend,
+                       forward_backend=args.forward_backend)
     trainer = Trainer(mcfg, task, tcfg, zo_cfg=zcfg)
     hist = trainer.train()
     summary = {
         "arch": args.arch, "optimizer": args.optimizer,
         "estimator": args.estimator, "q": args.q,
+        "forward_backend": args.forward_backend,
         "task": args.task or "synthetic",
         "metric": hist.get("metric_name", "val_loss"),
         "n_layers": n_layers, "n_drop": n_drop,

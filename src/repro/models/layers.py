@@ -177,18 +177,32 @@ def attn_params(cfg, key):
     return p
 
 
-def attn_fwd(cfg, p, x, *, mode, cache=None, pos=0):
-    """mode: train | prefill | decode.  Returns (out, new_cache)."""
+def attn_fwd(cfg, p, x, *, mode, cache=None, pos=0, pc=None):
+    """mode: train | prefill | decode.  Returns (out, new_cache).
+
+    ``pc`` (fused.LayerPerturb) switches every weight read to its
+    virtually perturbed view — loss(theta + s*eps*z) with no perturbed
+    weights ever materialized (DESIGN.md §10); None is the plain path.
+    """
     B, S, D = x.shape
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     G = H // KV
-    h = apply_norm(cfg, p["norm"], x)
-    q = (h @ p["wq"]).reshape(B, S, H, dh)
-    k = (h @ p["wk"]).reshape(B, S, KV, dh)
-    v = (h @ p["wv"]).reshape(B, S, KV, dh)
+    if pc is not None and "pk" in p:
+        raise NotImplementedError(
+            "virtual perturbation does not cover prefix-KV leaves")
+    mm = (lambda a, w, name: a @ w) if pc is None else pc.matmul
+    h = apply_norm(cfg, p["norm"] if pc is None else pc.norm(p["norm"],
+                                                             "norm"), x)
+    q = mm(h, p["wq"], "wq").reshape(B, S, H, dh)
+    k = mm(h, p["wk"], "wk").reshape(B, S, KV, dh)
+    v = mm(h, p["wv"], "wv").reshape(B, S, KV, dh)
     if cfg.qk_norm:
-        q = rms_norm(q, p["q_norm"]["scale"])
-        k = rms_norm(k, p["k_norm"]["scale"])
+        qn = (p["q_norm"]["scale"] if pc is None
+              else pc.vec(p["q_norm"]["scale"], "q_norm/scale"))
+        kn = (p["k_norm"]["scale"] if pc is None
+              else pc.vec(p["k_norm"]["scale"], "k_norm/scale"))
+        q = rms_norm(q, qn)
+        k = rms_norm(k, kn)
     positions = pos + jnp.arange(S)
     if cfg.pos_emb == "rope":
         q = rope(q, positions, cfg.rope_theta)
@@ -236,7 +250,7 @@ def attn_fwd(cfg, p, x, *, mode, cache=None, pos=0):
             Smax = cache["k"].shape[1]
             pad = [(0, 0), (0, Smax - S), (0, 0), (0, 0)]
             new_cache = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
-    out = o.reshape(B, S, H * dh) @ p["wo"]
+    out = mm(o.reshape(B, S, H * dh), p["wo"], "wo")
     return out.astype(x.dtype), new_cache
 
 
@@ -334,12 +348,15 @@ def ffn_params(cfg, key, d_ff=None):
     return p
 
 
-def ffn_fwd(cfg, p, x, d_ff=None):
-    h = apply_norm(cfg, p["norm"], x)
+def ffn_fwd(cfg, p, x, d_ff=None, pc=None):
+    mm = (lambda a, w, name: a @ w) if pc is None else pc.matmul
+    h = apply_norm(cfg, p["norm"] if pc is None else pc.norm(p["norm"],
+                                                             "norm"), x)
     if cfg.act == "silu":
-        a = jax.nn.silu((h @ p["wg"]).astype(F32)).astype(x.dtype) * (h @ p["wu"])
+        a = (jax.nn.silu(mm(h, p["wg"], "wg").astype(F32)).astype(x.dtype)
+             * mm(h, p["wu"], "wu"))
     elif cfg.act == "gelu":
-        a = jax.nn.gelu((h @ p["wi"]).astype(F32)).astype(x.dtype)
+        a = jax.nn.gelu(mm(h, p["wi"], "wi").astype(F32)).astype(x.dtype)
     else:
-        a = jax.nn.relu(h @ p["wi"])
-    return (a @ p["wd"]).astype(x.dtype)
+        a = jax.nn.relu(mm(h, p["wi"], "wi"))
+    return mm(a, p["wd"], "wd").astype(x.dtype)

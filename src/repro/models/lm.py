@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.fused import ref as fused_ref
 from repro.models import layers, moe, ssm
 from repro.models.config import BlockCfg, ModelConfig
 
@@ -121,13 +122,20 @@ _MIX_FWD = {"attn": layers.attn_fwd, "mla": layers.mla_fwd,
             "slstm": ssm.slstm_fwd}
 
 
-def _run_block(cfg, b: BlockCfg, p, x, *, mode, cache, pos):
+def _run_block(cfg, b: BlockCfg, p, x, *, mode, cache, pos, pc=None):
+    if pc is not None and (b.kind != "attn" or b.ffn == "moe"):
+        raise NotImplementedError(
+            f"virtual perturbation covers attn + dense blocks; got "
+            f"{b.kind}+{b.ffn} (use forward_backend='materialized')")
+    mix_kw = {} if pc is None else {"pc": pc.child("mix")}
     mix_out, new_cache = _MIX_FWD[b.kind](cfg, p["mix"], x, mode=mode,
-                                          cache=cache, pos=pos)
+                                          cache=cache, pos=pos, **mix_kw)
     x = x + mix_out
     aux = jnp.zeros((), F32)
     if b.ffn == "dense":
-        x = x + layers.ffn_fwd(cfg, p["ffn"], x, d_ff=b.d_ff or cfg.d_ff)
+        ffn_kw = {} if pc is None else {"pc": pc.child("ffn")}
+        x = x + layers.ffn_fwd(cfg, p["ffn"], x, d_ff=b.d_ff or cfg.d_ff,
+                               **ffn_kw)
     elif b.ffn == "moe":
         y, aux = moe.moe_fwd(cfg, p["ffn"], x)
         x = x + y
@@ -135,53 +143,84 @@ def _run_block(cfg, b: BlockCfg, p, x, *, mode, cache, pos):
 
 
 def forward(cfg: ModelConfig, params, tokens, *, mode="train", caches=None,
-            pos=0, embeds=None):
+            pos=0, embeds=None, perturb=None):
     """tokens: (B, S) int32, or ``embeds``: (B, S, D) for stub frontends.
 
     mode: train (no cache) | prefill (build cache) | decode (S==1, use+
     advance cache).  Returns (hidden (B,S,D), new_caches, aux_loss).
+
+    ``perturb`` (fused.PerturbCtx) runs the forward against the virtually
+    perturbed weights theta + s*eps*z: every weight read regenerates its
+    z slice from the counter RNG (per-layer predicated by the LeZO
+    masks), so the loss equals the materialized perturb-forward-restore
+    sequence's without any parameter writes (DESIGN.md §10).
     """
     if embeds is not None:
         x = embeds.astype(jnp.dtype(cfg.dtype))
-    else:
+    elif perturb is None:
         x = params["embed"]["tok"][tokens]
+    else:
+        x = fused_ref.pembed(params["embed"]["tok"], tokens,
+                             fused_ref.layer_seed(perturb.seed, "embed/tok"),
+                             perturb.scale)
     if cfg.pos_emb == "learned":
         S = x.shape[1]
-        x = x + lax.dynamic_slice_in_dim(params["embed"]["pos"], pos, S, 0)
+        if perturb is None:
+            x = x + lax.dynamic_slice_in_dim(params["embed"]["pos"], pos, S, 0)
+        else:
+            x = x + fused_ref.ppos(params["embed"]["pos"], pos, S,
+                                   fused_ref.layer_seed(perturb.seed,
+                                                        "embed/pos"),
+                                   perturb.scale)
 
     aux_total = jnp.zeros((), F32)
     new_caches: Dict[str, Any] = {}
     for si, st in enumerate(cfg.stages):
         sp = params["stages"][f"s{si}"]
         scache = caches[f"s{si}"] if caches is not None else None
+        if perturb is not None:
+            # per-block LeZO masks + layer ids ride the scan alongside the
+            # stacked params; group names match models.lm.zo_group_fn
+            pmasks = {f"b{bj}": perturb.group_mask(f"s{si}.b{bj}", st.repeat)
+                      for bj in range(len(st.pattern))}
+            lids = jnp.arange(st.repeat, dtype=jnp.uint32)
 
         def body(x_aux, sliced):
             x, aux = x_aux
-            bp_all, bc_all = sliced
+            if perturb is None:
+                bp_all, bc_all = sliced
+            else:
+                bp_all, bc_all, pm, lid = sliced
             ncs = {}
             for bj, b in enumerate(st.pattern):
                 bc = bc_all[f"b{bj}"] if bc_all is not None else None
+                pc = (None if perturb is None else
+                      perturb.block(f"stages/s{si}/b{bj}", lid,
+                                    pm[f"b{bj}"]))
                 x, nc, a = _run_block(cfg, b, bp_all[f"b{bj}"], x,
-                                      mode=mode, cache=bc, pos=pos)
+                                      mode=mode, cache=bc, pos=pos, pc=pc)
                 aux = aux + a
                 if nc is not None:
                     ncs[f"b{bj}"] = nc
             return (x, aux), (ncs if ncs else None)
 
+        xs = ((sp, scache) if perturb is None
+              else (sp, scache, pmasks, lids))
         if st.repeat == 1:
-            squeeze = lambda t: jax.tree.map(lambda a: a[0], t)
+            squeeze = lambda t: (jax.tree.map(lambda a: a[0], t)
+                                 if t is not None else None)
             (x, aux_total), nc = body((x, aux_total),
-                                      (squeeze(sp),
-                                       squeeze(scache) if scache is not None else None))
+                                      tuple(squeeze(t) for t in xs))
             if nc is not None:
                 new_caches[f"s{si}"] = jax.tree.map(lambda a: a[None], nc)
         else:
-            (x, aux_total), nc = lax.scan(
-                body, (x, aux_total),
-                (sp, scache) if scache is not None else (sp, None))
+            (x, aux_total), nc = lax.scan(body, (x, aux_total), xs)
             if nc is not None:
                 new_caches[f"s{si}"] = nc
-    x = layers.apply_norm(cfg, params["final_norm"], x)
+    fn = params["final_norm"]
+    if perturb is not None:
+        fn = perturb.leaf("final_norm").norm(fn)
+    x = layers.apply_norm(cfg, fn, x)
     return x, (new_caches if new_caches else None), aux_total
 
 
@@ -195,18 +234,27 @@ def logits_fn(cfg, params, hidden):
     return (hidden @ _head_matrix(cfg, params)).astype(F32)
 
 
-def chunked_ce(cfg, params, hidden, labels, loss_mask):
+def chunked_ce(cfg, params, hidden, labels, loss_mask, perturb=None):
     """Mean CE over masked positions without materializing (B,S,V) logits."""
     B, S, D = hidden.shape
     chunk = min(CE_CHUNK, S)
     assert S % chunk == 0
     n = S // chunk
     W = _head_matrix(cfg, params)
+    if perturb is not None:
+        # tied head reads embed/tok through a transpose: trans counters
+        # with the stored row length keep z identical to the axpy's
+        head = perturb.leaf("embed/tok" if cfg.tie_embeddings else "head/w")
+        head_kw = ({"trans": True, "ld": cfg.d_model}
+                   if cfg.tie_embeddings else {})
     resh = lambda a: a.reshape(B, n, chunk, *a.shape[2:]).swapaxes(0, 1)
 
     def body(carry, inp):
         h, y, m = inp
-        lg = (h @ W).astype(F32)                              # (B,chunk,V)
+        if perturb is None:
+            lg = (h @ W).astype(F32)                          # (B,chunk,V)
+        else:
+            lg = head.matmul(h, W, **head_kw).astype(F32)
         lse = jax.nn.logsumexp(lg, axis=-1)
         gold = jnp.take_along_axis(lg, y[..., None], axis=-1)[..., 0]
         nll = (lse - gold) * m
@@ -217,12 +265,17 @@ def chunked_ce(cfg, params, hidden, labels, loss_mask):
     return tot / jnp.maximum(cnt, 1.0)
 
 
-def lm_loss(cfg: ModelConfig, params, batch, aux_coef=0.0):
+def lm_loss(cfg: ModelConfig, params, batch, aux_coef=0.0, perturb=None):
     """batch: {tokens (B,S) int32, labels (B,S) int32, loss_mask (B,S)} or
-    {embeds (B,S,D), labels, loss_mask} for stub-frontend archs."""
+    {embeds (B,S,D), labels, loss_mask} for stub-frontend archs.
+
+    ``perturb`` (fused.PerturbCtx): evaluate loss(theta + s*eps*z)
+    virtually — see forward()."""
     hidden, _, aux = forward(cfg, params, batch.get("tokens"),
-                             embeds=batch.get("embeds"), mode="train")
-    loss = chunked_ce(cfg, params, hidden, batch["labels"], batch["loss_mask"])
+                             embeds=batch.get("embeds"), mode="train",
+                             perturb=perturb)
+    loss = chunked_ce(cfg, params, hidden, batch["labels"],
+                      batch["loss_mask"], perturb=perturb)
     return loss + aux_coef * aux
 
 

@@ -49,6 +49,10 @@ class TrainConfig:
     quorum: float = 1.0
     # peft
     peft: Optional[str] = None    # None | lora | prefix
+    # materialized | virtual | virtual_ref — virtual runs probe forwards
+    # against in-kernel-regenerated perturbed weights (repro.fused):
+    # a ZO step writes parameters exactly once (the update axpy)
+    forward_backend: str = "materialized"
 
 
 class Trainer:
@@ -66,12 +70,28 @@ class Trainer:
                  prefix_cfg: prefix_mod.PrefixConfig = prefix_mod.PrefixConfig(),
                  est_cfg: Optional[estimators.EstimatorConfig] = None):
         self.mcfg, self.task, self.tcfg = model_cfg, task, tcfg
+        if tcfg.forward_backend != "materialized":
+            zo_cfg = dataclasses.replace(zo_cfg,
+                                         forward_backend=tcfg.forward_backend)
         self.zo_cfg, self.fo_cfg = zo_cfg, fo_cfg
         self.registry_task = (task if isinstance(task, tasks_mod.CompiledTask)
                               else None)
         # explicit est_cfg wins; else lift zo_cfg + TrainConfig plumbing
         self.est_cfg = est_cfg or estimators.from_zo(
             zo_cfg, name=tcfg.estimator, q=tcfg.est_q)
+        if self.est_cfg.forward_backend != "materialized":
+            if tcfg.peft:
+                raise ValueError("forward_backend='virtual' covers "
+                                 "full-parameter ZO only (no PEFT merge)")
+            if tcfg.mode != "zo":
+                raise ValueError("forward_backend='virtual' requires "
+                                 "mode='zo'")
+            bad = [f"{b.kind}+{b.ffn}" for s in model_cfg.stages
+                   for b in s.pattern if b.kind != "attn" or b.ffn == "moe"]
+            if bad:
+                raise ValueError(
+                    "forward_backend='virtual' covers attn + dense blocks; "
+                    f"model has {sorted(set(bad))}")
         key = jax.random.PRNGKey(tcfg.seed)
         self.base_params = lm.init_params(model_cfg, key)
 
@@ -103,8 +123,9 @@ class Trainer:
     def _build_loss(self):
         mcfg, tcfg = self.mcfg, self.tcfg
 
-        def base_loss(trainable, batch):
-            return lm.lm_loss(mcfg, self._to_model(trainable), batch)
+        def base_loss(trainable, batch, perturb=None):
+            return lm.lm_loss(mcfg, self._to_model(trainable), batch,
+                              perturb=perturb)
 
         if tcfg.n_loss_shards <= 1 or tcfg.quorum >= 1.0:
             self.loss_fn = base_loss
@@ -113,7 +134,7 @@ class Trainer:
         n_sh = tcfg.n_loss_shards
         n_ok = max(1, int(round(tcfg.quorum * n_sh)))
 
-        def quorum_loss(trainable, batch):
+        def quorum_loss(trainable, batch, perturb=None):
             # deterministic straggler subset per batch content
             tag = jnp.sum(batch["labels"][:, -1]).astype(jnp.uint32)
             bits = rng.mix32(jnp.arange(n_sh, dtype=jnp.uint32) * jnp.uint32(
@@ -122,7 +143,8 @@ class Trainer:
             shards = jax.tree.map(
                 lambda x: x.reshape(n_sh, x.shape[0] // n_sh, *x.shape[1:]),
                 batch)
-            losses = jax.vmap(lambda b: base_loss(trainable, b))(shards)
+            losses = jax.vmap(
+                lambda b: base_loss(trainable, b, perturb=perturb))(shards)
             w = arrived.astype(jnp.float32)
             return jnp.sum(losses * w) / jnp.sum(w)
 

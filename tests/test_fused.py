@@ -1,0 +1,381 @@
+"""Virtual-perturbation fused runtime (repro.fused, DESIGN.md §10).
+
+Load-bearing claims:
+
+  * z-consistency: the virtual weight views regenerate exactly the z the
+    axpy sweeps (kernels/ops.py) draw — bit-for-bit, per leaf, per layer,
+    including the tied head's transposed counter window and embedding
+    row gathers.
+  * kernel == oracle: the Pallas pmatmul (interpret mode) matches the
+    pure-JAX oracle over dtypes, ragged tiles, trans layouts, offsets
+    and mask patterns.
+  * the step contract: a two_point step with forward_backend="virtual"
+    performs exactly ONE parameter axpy (the update) — no perturb, no
+    restore — while matching the materialized dense step's projected
+    gradient and parameters.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import estimators, fused
+from repro.configs import opt
+from repro.core import rng, zo
+from repro.estimators import costs
+from repro.fused import matmul as fused_matmul
+from repro.fused import ref as fref
+from repro.kernels import ops as kops
+from repro.models import lm
+
+# ---------------------------------------------------------------- helpers
+
+
+def _tiny_cfg(layers=2, d_model=64, vocab=256):
+    return opt.opt_tiny(layers=layers, d_model=d_model, vocab=vocab)
+
+
+def _batch(vocab, B=4, S=32, seed=0):
+    r = np.random.default_rng(seed)
+    toks = jnp.asarray(r.integers(0, vocab, (B, S)), jnp.int32)
+    return {"tokens": toks, "labels": toks,
+            "loss_mask": jnp.ones((B, S), jnp.float32)}
+
+
+def _loss_fn(mcfg):
+    return lambda p, b, perturb=None: lm.lm_loss(mcfg, p, b, perturb=perturb)
+
+
+# ---------------------------------------------------- kernel vs oracle
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("shape", [(16, 32, 48), (5, 7, 13), (33, 129, 65)])
+@pytest.mark.parametrize("trans", [False, True])
+def test_pmatmul_matches_ref(shape, dtype, trans):
+    """Pallas kernel (interpret) == oracle: aligned and ragged tiles,
+    both counter layouts, active and skipped layers."""
+    M, K, N = shape
+    dt = jnp.dtype(dtype)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (M, K), dt)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N), dt)
+    seed = jnp.uint32(1234)
+    tol = 1e-6 if dtype == "float32" else 5e-2
+    for active in (True, False):
+        a = fref.pmatmul(x, w, seed, 1e-3, jnp.bool_(active), trans=trans)
+        b = fused_matmul.pmatmul(x, w, seed, 1e-3, jnp.bool_(active),
+                                 trans=trans, interpret=True)
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=tol)
+
+
+def test_pmatmul_batched_input_and_block_invariance():
+    """3-D activations flatten correctly and the result is invariant to
+    the (static) tile sizes."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (2, 5, 40))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (40, 24))
+    seed = jnp.uint32(9)
+    want = fref.pmatmul(x, w, seed, 1e-2)
+    for bm, bn, bk in ((128, 128, 128), (8, 128, 128)):
+        got = fused_matmul.pmatmul(x, w, seed, 1e-2, block_m=bm, block_n=bn,
+                                   block_k=bk, interpret=True)
+        assert got.shape == (2, 5, 24)
+        np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                                   atol=1e-5)
+
+
+def test_pmatmul_counter_offsets_match_slices():
+    """Shard invariance: computing a (row/col)-slice with the matching
+    counter offset reproduces the slice of the full result — the property
+    fused/sharded.py's per-shard invocation is built on."""
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (6, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 48))
+    seed = jnp.uint32(5)
+    full = fused_matmul.pmatmul(x, w, seed, 1e-3, interpret=True)
+    colslice = fused_matmul.pmatmul(x, w[:, 16:40], seed, 1e-3, col_off=16,
+                                    ld=48, interpret=True)
+    np.testing.assert_allclose(np.asarray(full[:, 16:40]),
+                               np.asarray(colslice), atol=1e-6)
+    # row shards produce partial sums: sum of shard products == full
+    parts = [fused_matmul.pmatmul(x[:, a:b], w[a:b], seed, 1e-3, row_off=a,
+                                  ld=48, interpret=True)
+             for a, b in ((0, 16), (16, 32))]
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(parts[0] + parts[1]), atol=1e-5)
+
+
+def test_sharded_wrappers_match_dense():
+    """shard_map wrappers on a 1-device mesh reproduce the unsharded
+    kernel (the offsets path is covered for >1 shards above)."""
+    from jax.sharding import Mesh
+
+    from repro.fused import sharded
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("model",))
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (4, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 16))
+    seed, scale, active = jnp.uint32(2), 1e-3, True
+    want = fused_matmul.pmatmul(x, w, seed, scale, interpret=True)
+    got_c = sharded.pmatmul_col_sharded(mesh, x, w, seed, scale, active)
+    got_r = sharded.pmatmul_row_sharded(mesh, x, w, seed, scale, active)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got_c),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got_r),
+                               atol=1e-6)
+
+
+# ------------------------------------------------- z-consistency contract
+def test_virtual_weight_matches_axpy_unstacked_and_stacked():
+    """fref views draw the exact z the axpy sweeps add: unstacked leaf,
+    stacked per-layer leaf under a mask, and vector leaves."""
+    key = jax.random.PRNGKey(0)
+    step_seed = jnp.uint32(77)
+    w = jax.random.normal(key, (24, 40))
+    wm = kops.zo_axpy(w, path="head/w", seed=step_seed, scale=1e-3)
+    weff = fref.pvec(w, fref.layer_seed(step_seed, "head/w", 0), 1e-3)
+    assert np.array_equal(np.asarray(wm), np.asarray(weff))
+
+    ws = jax.random.normal(key, (6, 24, 40))
+    mask = jnp.asarray([1, 0, 1, 1, 0, 1], bool)
+    wm = kops.zo_axpy(ws, path="stages/s0/b0/mix/wq", seed=step_seed,
+                      scale=1e-3, mask=mask)
+    for l in range(6):
+        weff = fref.pvec(ws[l],
+                         fref.layer_seed(step_seed, "stages/s0/b0/mix/wq", l),
+                         1e-3, active=mask[l])
+        assert np.array_equal(np.asarray(wm[l]), np.asarray(weff)), l
+
+
+def test_virtual_tied_head_and_embedding_match_axpy():
+    """Tied head reads embed/tok.T through trans counters; embedding
+    lookups gather the perturbed rows — both exactly the axpy's z."""
+    key = jax.random.PRNGKey(1)
+    step_seed = jnp.uint32(31)
+    tok = jax.random.normal(key, (40, 24))
+    tokp = kops.zo_axpy(tok, path="embed/tok", seed=step_seed, scale=1e-3)
+    h = jax.random.normal(jax.random.fold_in(key, 1), (4, 24))
+    lseed = fref.layer_seed(step_seed, "embed/tok", 0)
+    got = fref.pmatmul(h, tok.T, lseed, 1e-3, trans=True, ld=24)
+    assert np.array_equal(np.asarray(h @ tokp.T), np.asarray(got))
+
+    toks = jnp.asarray([[1, 5, 2], [0, 3, 39]], jnp.int32)
+    ge = fref.pembed(tok, toks, lseed, 1e-3)
+    assert np.array_equal(np.asarray(tokp[toks]), np.asarray(ge))
+
+    pos = kops.zo_axpy(tok, path="embed/pos", seed=step_seed, scale=1e-3)
+    pp = fref.ppos(tok, 8, 16, fref.layer_seed(step_seed, "embed/pos", 0),
+                   1e-3)
+    assert np.array_equal(np.asarray(pos[8:24]), np.asarray(pp))
+
+
+@pytest.mark.parametrize("n_drop", [0, 2])
+def test_virtual_loss_equals_materialized(n_drop):
+    """lm_loss(params, perturb=ctx) equals lm_loss(materialized perturbed
+    params) across mask patterns and both probe signs — embeddings,
+    positions, norms, projections, tied head.  The z streams themselves
+    are bit-identical (tested above); the losses agree to XLA fusion
+    tolerance (the two graphs fuse the same float ops differently)."""
+    mcfg = _tiny_cfg(layers=4)
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    spec = zo.build_spec(params, lm.zo_group_fn)
+    batch = _batch(mcfg.vocab)
+    for t in range(3):
+        seed = rng.fold(jnp.uint32(9), jnp.uint32(t))
+        masks, _, _ = zo.stratified_select(spec, seed, n_drop)
+        for sign in (1.0, -1.0):
+            pmat = zo.tree_axpy(params, spec, seed, sign * 1e-3, masks)
+            want = float(lm.lm_loss(mcfg, pmat, batch))
+            ctx = fused.make_ctx(seed, sign * 1e-3, masks, "virtual_ref")
+            got = float(lm.lm_loss(mcfg, params, batch, perturb=ctx))
+            np.testing.assert_allclose(want, got, rtol=1e-6,
+                                       err_msg=f"t={t} sign={sign}")
+
+
+def test_virtual_pallas_loss_close_to_materialized():
+    """The kernel path agrees with the materialized loss to float32
+    accumulation tolerance."""
+    mcfg = _tiny_cfg()
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    spec = zo.build_spec(params, lm.zo_group_fn)
+    batch = _batch(mcfg.vocab, B=2, S=16)
+    seed = jnp.uint32(11)
+    masks, _, _ = zo.stratified_select(spec, seed, 1)
+    pmat = zo.tree_axpy(params, spec, seed, 1e-3, masks)
+    want = float(lm.lm_loss(mcfg, pmat, batch))
+    ctx = fused.make_ctx(seed, 1e-3, masks, "virtual")
+    got = float(lm.lm_loss(mcfg, params, batch, perturb=ctx))
+    np.testing.assert_allclose(want, got, rtol=1e-5)
+
+
+# -------------------------------------------------------- step contract
+@pytest.mark.parametrize("fb", ["virtual_ref", "virtual"])
+def test_two_point_virtual_matches_materialized_dense(fb):
+    """Acceptance gate: the virtual two_point step matches the dense
+    materialized step's projected gradient to <=1e-5 rel and its updated
+    parameters to float tolerance on the tiny OPT config."""
+    mcfg = _tiny_cfg()
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    spec = zo.build_spec(params, lm.zo_group_fn)
+    batch = _batch(mcfg.vocab, B=2, S=16)
+    loss_fn = _loss_fn(mcfg)
+    outs = {}
+    for backend in ("materialized", fb):
+        ecfg = estimators.EstimatorConfig(
+            name="two_point", n_drop=1, lr=1e-4, eps=1e-3,
+            weight_decay=0.01, forward_backend=backend)
+        step, init = estimators.make_step(loss_fn, spec, ecfg)
+        outs[backend] = jax.jit(step)(params, init(), batch, jnp.int32(3),
+                                      jnp.uint32(9))
+    _, _, m_mat = outs["materialized"]
+    p_vir, _, m_vir = outs[fb]
+    np.testing.assert_allclose(float(m_mat["projected_grad"]),
+                               float(m_vir["projected_grad"]), rtol=1e-5)
+    np.testing.assert_allclose(float(m_mat["loss"]), float(m_vir["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(outs["materialized"][0]),
+                    jax.tree.leaves(p_vir)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("name,q", [("one_sided", 3), ("averaged", 2),
+                                    ("importance", 1)])
+def test_estimators_virtual_matches_materialized(name, q):
+    """Every estimator produces the same step under virtual_ref probes as
+    under materialized dense probes (identical z, identical floats)."""
+    mcfg = _tiny_cfg()
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    spec = zo.build_spec(params, lm.zo_group_fn)
+    batch = _batch(mcfg.vocab, B=2, S=16)
+    loss_fn = _loss_fn(mcfg)
+    outs = []
+    for fb in ("materialized", "virtual_ref"):
+        ecfg = estimators.EstimatorConfig(name=name, q=q, n_drop=1, lr=1e-4,
+                                          eps=1e-3, forward_backend=fb)
+        step, init = estimators.make_step(loss_fn, spec, ecfg)
+        p, _, m = jax.jit(step)(params, init(), batch, jnp.int32(1),
+                                jnp.uint32(5))
+        outs.append((p, m))
+    for a, b in zip(jax.tree.leaves(outs[0][0]), jax.tree.leaves(outs[1][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    np.testing.assert_allclose(float(outs[0][1]["projected_grad"]),
+                               float(outs[1][1]["projected_grad"]),
+                               rtol=1e-4)
+
+
+def test_virtual_step_performs_single_axpy(monkeypatch):
+    """Zero perturb/restore parameter writes: tracing the virtual step
+    invokes the axpy machinery exactly once (the update); materialized
+    invokes it three times (perturb, perturb, fused restore+update)."""
+    mcfg = _tiny_cfg()
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    spec = zo.build_spec(params, lm.zo_group_fn)
+    batch = _batch(mcfg.vocab, B=2, S=16)
+    loss_fn = _loss_fn(mcfg)
+    calls = []
+    orig = zo.tree_axpy
+    monkeypatch.setattr(zo, "tree_axpy",
+                        lambda *a, **k: calls.append(1) or orig(*a, **k))
+    for fb, want in (("materialized", 3), ("virtual_ref", 1)):
+        calls.clear()
+        ecfg = estimators.EstimatorConfig(name="two_point", n_drop=1,
+                                          forward_backend=fb)
+        step, init = estimators.make_step(loss_fn, spec, ecfg)
+        jax.eval_shape(step, params, init(), batch, jnp.int32(0),
+                       jnp.uint32(1))
+        assert len(calls) == want, fb
+
+
+def test_virtual_jaxpr_has_single_param_write():
+    """The jaxpr-level version of the write contract: with buffer
+    donation, only one donated input can alias each parameter output —
+    count scatter/dynamic-update-free full-leaf writes by checking that
+    dropping the update scale freezes the params exactly."""
+    mcfg = _tiny_cfg()
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    spec = zo.build_spec(params, lm.zo_group_fn)
+    batch = _batch(mcfg.vocab, B=2, S=16)
+    loss_fn = _loss_fn(mcfg)
+    # lr=0, weight_decay=0: the lone update axpy has scale -lr*g == 0 and
+    # decay 1, so if it is truly the only θ write the step is an exact
+    # no-op on parameters.  Any residual perturb/restore write would
+    # leave a +-eps*z trace.
+    ecfg = estimators.EstimatorConfig(name="two_point", n_drop=1, lr=0.0,
+                                      eps=1e-3, forward_backend="virtual_ref")
+    step, init = estimators.make_step(loss_fn, spec, ecfg)
+    p, _, _ = jax.jit(step)(params, init(), batch, jnp.int32(2),
+                            jnp.uint32(7))
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cost_model_virtual_entries():
+    assert costs.step_counts("two_point")["axpy_sweeps"] == 3
+    for fb in ("virtual", "virtual_ref"):
+        assert costs.step_counts("two_point", forward_backend=fb) == {
+            "forwards": 2, "axpy_sweeps": 1, "state_scalars": 0}
+        assert costs.step_counts("one_sided", q=8, forward_backend=fb) == {
+            "forwards": 9, "axpy_sweeps": 8, "state_scalars": 0}
+        assert costs.step_counts("averaged", q=4, forward_backend=fb) == {
+            "forwards": 8, "axpy_sweeps": 4, "state_scalars": 0}
+        imp = costs.step_counts("importance", num_layers=12,
+                                forward_backend=fb)
+        assert imp["axpy_sweeps"] == 1 and imp["state_scalars"] == 12
+    with pytest.raises(ValueError):
+        costs.step_counts("two_point", forward_backend="nope")
+
+
+def test_estimator_step_cost_prices_virtual_sweeps():
+    from repro.launch import analysis
+
+    terms = {"compute_s": 1.0, "memory_s": 2.0, "collective_s": 0.0}
+    pb = 819e9 / 4                        # 0.5 s per sweep at default bw
+    mat = analysis.estimator_step_cost(terms, "two_point", param_bytes=pb)
+    vir = analysis.estimator_step_cost(terms, "two_point", param_bytes=pb,
+                                       forward_backend="virtual")
+    assert mat["axpy_sweeps"] == 3 and vir["axpy_sweeps"] == 1
+    # fwd_mem = 2.0 - 3*0.5 = 0.5 -> mat: 0.5 + 1.5 = 2.0, vir: 0.5 + 0.5
+    np.testing.assert_allclose(mat["memory_s"], 2.0)
+    np.testing.assert_allclose(vir["memory_s"], 1.0)
+
+
+# -------------------------------------------------- trainer integration
+def test_trainer_virtual_backend_trains():
+    from repro.data import synthetic
+    from repro.train.trainer import Trainer, TrainConfig
+
+    mcfg = _tiny_cfg(d_model=32, vocab=128)
+    task = synthetic.TaskConfig(vocab=128, seq_len=32, n_classes=2,
+                                signal_rate=0.35)
+    tr = Trainer(mcfg, task,
+                 TrainConfig(steps=8, batch_size=4, eval_every=0,
+                             log_every=2, forward_backend="virtual_ref"),
+                 zo_cfg=zo.ZOConfig(eps=1e-3, lr=2e-4, n_drop=1))
+    assert tr.est_cfg.forward_backend == "virtual_ref"
+    h = tr.train()
+    assert np.isfinite(h["loss"]).all()
+
+
+def test_trainer_virtual_guards():
+    from repro.data import synthetic
+    from repro.train.trainer import Trainer, TrainConfig
+
+    mcfg = _tiny_cfg(d_model=32, vocab=128)
+    task = synthetic.TaskConfig(vocab=128, seq_len=32, n_classes=2)
+    with pytest.raises(ValueError, match="PEFT"):
+        Trainer(mcfg, task, TrainConfig(peft="lora",
+                                        forward_backend="virtual_ref"))
+    with pytest.raises(ValueError, match="mode"):
+        Trainer(mcfg, task, TrainConfig(mode="fo",
+                                        forward_backend="virtual_ref"))
+    moe_cfg = dataclasses.replace(
+        mcfg, stages=(dataclasses.replace(
+            mcfg.stages[0],
+            pattern=(dataclasses.replace(mcfg.stages[0].pattern[0],
+                                         ffn="moe"),)),),
+        n_experts=4, top_k=2, moe_d_ff=64)
+    with pytest.raises(ValueError, match="attn"):
+        Trainer(moe_cfg, task, TrainConfig(forward_backend="virtual_ref"))

@@ -119,3 +119,34 @@ def test_weighted_uniform_weights_cardinality(seed):
     """Degenerate equal weights: still exact cardinality, no ties lost."""
     m = _mask("weighted", 9, 3, seed, 0, weights=np.ones(9, np.float32))
     assert int(m.sum()) == 6
+
+
+def test_weighted_exact_cardinality_under_score_ties():
+    """Regression: the old threshold select (`score >= sort(score)[N-k]`)
+    kept MORE than k layers whenever scores tied at the cut.  Saturated
+    weights make the tie deterministic (log(inf) + gumbel == inf for
+    every such layer): 6 tied top scores with k=4 must still yield
+    exactly 4 active layers, all from the tied group."""
+    w = jnp.asarray([np.inf] * 6 + [1.0] * 2, jnp.float32)
+    for seed in range(8):
+        m = np.asarray(selection.weighted_active(jnp.uint32(seed), w, 4))
+        assert int(m.sum()) == 4, seed
+        assert not m[6:].any()              # winners come from the tie
+    # large-N equal weights: exact cardinality as a property sweep
+    for seed in range(4):
+        m = np.asarray(selection.weighted_active(
+            jnp.uint32(seed), jnp.ones((4096,), jnp.float32), 2048))
+        assert int(m.sum()) == 2048, seed
+
+
+def test_weighted_degenerate_k_edges():
+    """Regression: k == 0 (n_drop == num_layers) used to index the sorted
+    scores out of bounds (clamped under jit to a wrong 1-layer mask);
+    n_drop == 0 must keep everything; out-of-range n_drop raises."""
+    w = jnp.ones((6,), jnp.float32)
+    assert int(selection.weighted_active(jnp.uint32(3), w, 0).sum()) == 6
+    assert int(selection.weighted_active(jnp.uint32(3), w, 6).sum()) == 0
+    with pytest.raises(ValueError):
+        selection.weighted_active(jnp.uint32(3), w, 7)
+    with pytest.raises(ValueError):
+        selection.weighted_active(jnp.uint32(3), w, -1)
