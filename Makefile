@@ -3,13 +3,16 @@
 #                      this is what .github/workflows/ci.yml runs per push
 #   make test        - tier-2: the full suite (the ROADMAP.md verify command)
 #   make bench-smoke - fast estimator-sweep + fused-runtime benchmarks on
-#                      CPU (interpret-mode kernels); writes BENCH_fused.json
+#                      CPU (interpret-mode kernels), driven by the shared
+#                      `bench-smoke` spec preset; writes BENCH_fused.json
+#   make specs       - dump every repro.api preset to artifacts/specs/
+#                      (the serialized experiment-spec surface CI archives)
 #   make lint        - bytecode-compile everything (+ ruff when installed)
 
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench-smoke lint
+.PHONY: test test-fast bench-smoke specs lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -18,8 +21,11 @@ test-fast:
 	$(PY) -m pytest -q -m "not slow"
 
 bench-smoke:
-	$(PY) benchmarks/estimator_sweep.py --smoke
-	$(PY) benchmarks/fused_forward.py --smoke --json BENCH_fused.json
+	$(PY) benchmarks/estimator_sweep.py --smoke --preset bench-smoke
+	$(PY) benchmarks/fused_forward.py --smoke --preset bench-smoke --json BENCH_fused.json
+
+specs:
+	$(PY) -m repro.launch specs --out artifacts/specs
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

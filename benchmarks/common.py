@@ -31,10 +31,13 @@ def timeit(fn, *args, warmup=2, iters=5):
     return float(np.median(ts))
 
 
-def bench_model(layers=4, d_model=512, vocab=2048, seq=32):
+def bench_model(seq=32):
     """A CPU-timeable model whose params/token ratio mirrors the paper's
-    short-sequence fine-tuning regime (perturb work ~ forward work)."""
-    return opt.opt_tiny(layers=layers, d_model=d_model, vocab=vocab), seq
+    short-sequence fine-tuning regime (perturb work ~ forward work).
+    The shape is the registry's ``bench`` variant — the same model the
+    ``bench-smoke`` spec preset resolves to — so every benchmark suite
+    measures one config."""
+    return opt.bench(), seq
 
 
 def make_batch(cfg, batch, seq, seed=0):
@@ -65,9 +68,14 @@ def rows_to_json(rows):
             for n, us, d in rows]
 
 
-def write_json(path, payload):
-    """Write a BENCH_*.json trajectory file with environment metadata."""
+def write_json(path, payload, spec=None):
+    """Write a BENCH_*.json trajectory file with environment metadata.
+    ``spec`` (a ``repro.api.Experiment``) is embedded when given, so
+    bench artifacts carry the exact experiment they measured."""
     payload = dict(payload)
+    if spec is not None:
+        from repro import api
+        payload["spec"] = api.to_dict(spec)
     payload.setdefault("meta", {})
     payload["meta"].update({
         "jax": jax.__version__,

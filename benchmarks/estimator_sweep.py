@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_model, emit, make_batch, timeit
+from benchmarks.common import emit, make_batch, timeit
 from repro import estimators
 from repro.configs import opt
 from repro.core import zo
@@ -41,11 +41,11 @@ GRID = (("two_point", 1), ("one_sided", 4), ("one_sided", 16),
 _SMOOTH = 20  # steps in the running-mean loss window
 
 
-def _estimator_step(mcfg, name, q, n_drop, lr):
+def _estimator_step(mcfg, name, q, n_drop, lr, eps=1e-3):
     params = lm.init_params(mcfg, jax.random.PRNGKey(0))
     spec = zo.build_spec(params, lm.zo_group_fn)
     ecfg = estimators.EstimatorConfig(name=name, q=q, n_drop=n_drop, lr=lr,
-                                      eps=1e-3)
+                                      eps=eps)
     loss_fn = lambda p, b: lm.lm_loss(mcfg, p, b)
     # no buffer donation: the timing loop re-feeds the same params
     step, init = estimators.make_step(loss_fn, spec, ecfg)
@@ -73,16 +73,23 @@ def _smoothed(losses):
     return c
 
 
-def run(smoke=False):
+def run(smoke=False, preset="bench-smoke"):
+    # the sweep's model / batch / eps / lr / sparsity come from the shared
+    # experiment-spec preset, so CI and the CLI can't drift on them
+    from repro import api
+    espec = api.presets.get(preset)
+    d = api.derive(espec)
     rows = []
-    budget = 120 if smoke else 300
+    budget = espec.run.steps if smoke else 300
 
-    # ---- wall-clock per step at rho = 0.75 ------------------------------
-    mcfg, seq = bench_model()
-    batch = make_batch(mcfg, 8, seq)
-    n_drop = int(0.75 * mcfg.num_layers)
+    # ---- wall-clock per step at the preset's sparsity -------------------
+    mcfg, seq = d.model_cfg, espec.model.seq_len
+    batch = make_batch(mcfg, espec.run.batch_size, seq)
+    n_drop = d.n_drop
     for name, q in GRID:
-        params, step, init = _estimator_step(mcfg, name, q, n_drop, 1e-4)
+        params, step, init = _estimator_step(mcfg, name, q, n_drop,
+                                             espec.optimizer.lr,
+                                             eps=espec.optimizer.eps)
         counts = estimators.costs.step_counts(name, q=q)
         t = timeit(lambda: step(params, init(), batch, jnp.int32(0),
                                 jnp.uint32(1)), warmup=1, iters=3)
@@ -110,4 +117,12 @@ def run(smoke=False):
 
 
 if __name__ == "__main__":
-    run(smoke="--smoke" in sys.argv)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--preset", default="bench-smoke",
+                    help="experiment spec preset the bench runs off "
+                         "(repro.api.presets)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, preset=args.preset)

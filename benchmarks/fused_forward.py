@@ -25,7 +25,7 @@ sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from benchmarks.common import (bench_model, emit, make_batch, rows_to_json,  # noqa: E402
+from benchmarks.common import (emit, make_batch, rows_to_json,  # noqa: E402
                                timeit, write_json)
 from repro import estimators  # noqa: E402
 from repro.core import zo  # noqa: E402
@@ -37,28 +37,40 @@ from repro.models import lm  # noqa: E402
 RHOS = (0.0, 0.5, 0.75)
 
 
-def _step(mcfg, n_drop, forward_backend):
+def _bench_spec(preset="bench-smoke"):
+    """The experiment spec this benchmark is a projection of — model and
+    optimizer knobs come from the shared preset, not inline flags."""
+    from repro import api
+    return api.presets.get(preset)
+
+
+def _step(mcfg, espec, n_drop, forward_backend):
+    import dataclasses
+
+    from repro import api
     params = lm.init_params(mcfg, jax.random.PRNGKey(0))
     spec = zo.build_spec(params, lm.zo_group_fn)
-    ecfg = estimators.EstimatorConfig(name="two_point", n_drop=n_drop,
-                                      lr=1e-4, eps=1e-3,
-                                      forward_backend=forward_backend)
+    ecfg = dataclasses.replace(api.derive(espec).est_cfg, n_drop=n_drop,
+                               forward_backend=forward_backend)
     loss_fn = lambda p, b, perturb=None: lm.lm_loss(mcfg, p, b,
                                                     perturb=perturb)
     step, init = estimators.make_step(loss_fn, spec, ecfg)
     return params, jax.jit(step), init
 
 
-def run(smoke=False, json_path=None):
-    mcfg, seq = bench_model()
-    batch = make_batch(mcfg, 8 if smoke else 16, seq)
+def run(smoke=False, json_path=None, preset="bench-smoke"):
+    from repro import api
+    espec = _bench_spec(preset)
+    d = api.derive(espec)
+    mcfg, seq = d.model_cfg, espec.model.seq_len
+    batch = make_batch(mcfg, espec.run.batch_size if smoke else 16, seq)
     iters = 3 if smoke else 5
     rows, cells = [], []
     for rho in RHOS:
         n_drop = int(rho * mcfg.num_layers)
         times = {}
         for fb in ("materialized", "virtual_ref"):
-            params, step, init = _step(mcfg, n_drop, fb)
+            params, step, init = _step(mcfg, espec, n_drop, fb)
             t = timeit(lambda: step(params, init(), batch, jnp.int32(0),
                                     jnp.uint32(1)), warmup=1, iters=iters)
             times[fb] = t
@@ -96,7 +108,7 @@ def run(smoke=False, json_path=None):
                     "tests/test_fused.py in interpret mode)",
             "cells": cells,
             "rows": rows_to_json(rows),
-        })
+        }, spec=espec)
     return rows
 
 
@@ -105,7 +117,10 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--preset", default="bench-smoke",
+                    help="experiment spec preset the bench runs off "
+                         "(repro.api.presets)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the BENCH_fused.json trajectory here")
     args = ap.parse_args()
-    run(smoke=args.smoke, json_path=args.json)
+    run(smoke=args.smoke, json_path=args.json, preset=args.preset)

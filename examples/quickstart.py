@@ -1,10 +1,12 @@
-"""Quickstart: fine-tune a small OPT-family model with LeZO vs MeZO.
+"""Quickstart: fine-tune a small OPT-family model with LeZO vs MeZO
+through the unified experiment API (DESIGN.md §11).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 
 Reproduces the paper's core claim at CPU scale: LeZO (75% of layers
 dropped per step) converges at least as fast as MeZO per *step* while
-doing ~4x less perturbation/update work per step.
+doing ~4x less perturbation/update work per step.  Every scenario below
+is a spec diff on the same preset — no hand-wired config plumbing.
 """
 import sys, pathlib, time
 sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
@@ -12,47 +14,47 @@ sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
 import jax
 import jax.numpy as jnp
 
-from repro import estimators
-from repro.configs import opt
+from repro import api, estimators
 from repro.core import zo
-from repro.data import synthetic
 from repro.models import lm
-from repro.train.trainer import Trainer, TrainConfig
 
-mcfg = opt.opt_tiny(layers=4, d_model=128, vocab=512)
-task = synthetic.TaskConfig(vocab=512, seq_len=64, n_classes=2,
-                            signal_rate=0.35)
-STEPS = 400
+BASE = api.with_overrides(api.preset("tiny-smoke"), {
+    "task.signal_rate": 0.35, "model.seq_len": 64,
+    "optimizer.lr": 3e-4,
+    "run.steps": 400, "run.batch_size": 16,
+    "run.eval_every": 100, "run.log_every": 100,
+})
 
-for name, n_drop in [("MeZO", 0), ("LeZO (75% sparse)", 3)]:
-    tr = Trainer(mcfg, task,
-                 TrainConfig(steps=STEPS, batch_size=16, eval_every=100,
-                             log_every=100),
-                 zo_cfg=zo.ZOConfig(eps=1e-3, lr=3e-4, n_drop=n_drop,
-                                    backend="scan"))
-    h = tr.train()
+for name, sparsity in [("MeZO", 0.0), ("LeZO (75% sparse)", 0.75)]:
+    spec = api.with_overrides(BASE, {"optimizer.sparsity": sparsity})
+    h = api.run(spec)["history"]
     print(f"{name:20s} loss: " + " -> ".join(f"{x:.3f}" for x in h["loss"])
           + f"   val_acc: {h['val_acc']}")
 
 # --- virtual-perturbation fused runtime (repro.fused, DESIGN.md §10) ---
-# The same two-point step with forward_backend="virtual" evaluates both
-# probes against in-kernel-regenerated perturbed weights: the perturb and
-# restore parameter sweeps vanish and only the update axpy writes theta.
-# Timed here at a perturb-heavy params/token ratio (the paper's regime);
-# "virtual_ref" is the pure-JAX oracle — the Pallas kernel path
-# (forward_backend="virtual") produces the same floats on TPU.
-bcfg = opt.opt_tiny(layers=4, d_model=512, vocab=2048)
+# The same two-point step with runtime.forward_backend="virtual"
+# evaluates both probes against in-kernel-regenerated perturbed weights:
+# the perturb and restore parameter sweeps vanish and only the update
+# axpy writes theta.  Timed here at a perturb-heavy params/token ratio
+# (the paper's regime) via the bench-smoke preset; "virtual_ref" is the
+# pure-JAX oracle — the Pallas kernel path (forward_backend="virtual")
+# produces the same floats on TPU.
+bspec = api.preset("bench-smoke")
+bd = api.derive(bspec)
+bcfg = bd.model_cfg
 bparams = lm.init_params(bcfg, jax.random.PRNGKey(0))
-bspec = zo.build_spec(bparams, lm.zo_group_fn)
+bzospec = zo.build_spec(bparams, lm.zo_group_fn)
 bbatch = {"tokens": (toks := jnp.zeros((8, 32), jnp.int32)), "labels": toks,
           "loss_mask": jnp.ones((8, 32), jnp.float32)}
 bloss = lambda p, b, perturb=None: lm.lm_loss(bcfg, p, b, perturb=perturb)
 
 times = {}
 for fb in ("materialized", "virtual_ref"):
-    ecfg = estimators.EstimatorConfig(name="two_point", n_drop=3, lr=3e-4,
-                                      eps=1e-3, forward_backend=fb)
-    step, init = estimators.make_step(bloss, bspec, ecfg)
+    ecfg = api.derive(api.with_overrides(
+        bspec, {"optimizer.sparsity": 0.75,
+                "optimizer.lr": 3e-4,
+                "runtime.forward_backend": fb})).est_cfg
+    step, init = estimators.make_step(bloss, bzospec, ecfg)
     step = jax.jit(step)
     jax.block_until_ready(step(bparams, init(), bbatch, jnp.int32(0),
                                jnp.uint32(1)))          # compile

@@ -1,0 +1,50 @@
+"""Unified experiment API (DESIGN.md §11).
+
+One serializable config tree, one validation site, one CLI surface::
+
+    from repro import api
+
+    spec = api.preset("lezo-opt13b")
+    spec = api.with_overrides(spec, {"optimizer.lr": 1e-4,
+                                     "estimator.name": "one_sided",
+                                     "estimator.q": 16})
+    api.validate(spec)              # every invariant, at build time
+    result = api.run(spec)          # {"spec", "summary", "history"}
+
+The spec round-trips through JSON byte-stably (``to_json`` /
+``from_json``), is embedded in every checkpoint manifest and result
+artifact, and drives the single generated-flag CLI::
+
+    python -m repro.launch train --preset lezo-opt13b \
+        --set optimizer.lr=1e-4 --set estimator.q=16
+
+``spec`` / ``validate`` / ``presets`` are import-light (no jax); the
+runners (``run`` / ``evaluate`` / ``dryrun`` / ``sweep`` / ``derive``)
+load lazily since they pull the full training stack.
+"""
+from repro.api import presets, validate as _validate_mod
+from repro.api.presets import PRESETS
+from repro.api.spec import (Experiment, Estimator, Model, Optimizer, Run,
+                            Runtime, SpecError, Task, UnknownTaskError,
+                            check_resume_spec, coerce, field_of,
+                            field_paths, from_dict, from_json, spec_diff,
+                            to_dict, to_json, with_overrides)
+
+validate = _validate_mod.validate
+
+_LAZY = ("run", "evaluate", "dryrun", "dryrun_cell", "sweep", "derive",
+         "preset", "Derived")
+
+__all__ = ["Experiment", "Estimator", "Model", "Optimizer", "PRESETS",
+           "Run", "Runtime", "SpecError", "Task", "UnknownTaskError",
+           "check_resume_spec", "coerce", "field_of", "field_paths",
+           "from_dict", "from_json", "presets", "spec_diff", "to_dict",
+           "to_json", "validate", "with_overrides", *_LAZY]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        runners = importlib.import_module("repro.api.runners")
+        return getattr(runners, name)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

@@ -102,6 +102,17 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def read_manifest(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """The manifest alone — lets a resume validate the embedded
+        experiment spec (``extra["spec"]``, see DESIGN.md §11) before
+        any array bytes are read."""
+        step = step if step is not None else self.latest()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)
+
     def restore(self, template, step: Optional[int] = None):
         """Restore into the structure of ``template`` (validates shapes).
 

@@ -37,3 +37,14 @@ def opt_tiny(layers=4, d_model=128, vocab=512) -> ModelConfig:
     return dense_lm(f"opt-tiny-{layers}L{d_model}", layers, d_model, 4, 4,
                     4 * d_model, vocab, dtype="float32",
                     **{**_COMMON, "max_seq": 256})
+
+
+def tiny() -> ModelConfig:
+    """Registry variant for the fast-tier fixtures (``model.variant``)."""
+    return opt_tiny()
+
+
+def bench() -> ModelConfig:
+    """Registry variant at the benchmark suite's perturb-heavy
+    params/token ratio (benchmarks/common.bench_model)."""
+    return opt_tiny(layers=4, d_model=512, vocab=2048)

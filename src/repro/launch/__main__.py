@@ -1,0 +1,5 @@
+"""``python -m repro.launch <cmd>`` — the unified spec-driven CLI."""
+from repro.launch import cli
+
+if __name__ == "__main__":
+    raise SystemExit(cli.console())

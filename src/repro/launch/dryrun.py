@@ -7,8 +7,6 @@ import os  # noqa: E402
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=512")
 
-import argparse   # noqa: E402
-import json       # noqa: E402
 import re         # noqa: E402
 import time       # noqa: E402
 
@@ -16,7 +14,7 @@ import jax        # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro import configs                      # noqa: E402
-from repro.configs.shapes import SHAPES, shapes_for  # noqa: E402
+from repro.configs.shapes import SHAPES        # noqa: E402
 from repro.launch import analysis, specs       # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import frontends, lm         # noqa: E402
@@ -202,61 +200,28 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     return rec
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default=None)
-    ap.add_argument("--shape", default=None)
-    ap.add_argument("--variant", default="optimized",
-                    choices=["optimized", "faithful", "mezo"])
-    ap.add_argument("--estimator", default="two_point",
-                    choices=["two_point", "one_sided", "averaged",
-                             "importance"],
-                    help="estimator assumed for the model-FLOPs column")
-    ap.add_argument("--q", type=int, default=1,
-                    help="directions per step for one_sided / averaged")
-    from repro.estimators.costs import FORWARD_BACKENDS  # noqa: E402
-    ap.add_argument("--forward-backend", default="materialized",
-                    choices=list(FORWARD_BACKENDS),
-                    help="assumed for the analytic step_counts column")
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--both-meshes", action="store_true")
-    ap.add_argument("--all", action="store_true",
-                    help="every (arch x shape) cell")
-    ap.add_argument("--out", default="artifacts/dryrun")
-    ap.add_argument("--save-hlo", default=None, help="dir for gzipped HLO")
-    args = ap.parse_args()
+def _translate_legacy(argv):
+    """Legacy flag spellings -> unified spec CLI: ``--variant`` here
+    always meant the *lowering* variant (optimized|faithful|mezo)."""
+    out = []
+    for a in argv:
+        if a == "--variant":
+            out.append("--lowering")
+        elif a.startswith("--variant="):
+            out.append("--lowering=" + a.split("=", 1)[1])
+        else:
+            out.append(a)
+    return out
 
-    cells = []
-    archs = [a for a in configs.list_archs() if a != "opt-13b"] \
-        if args.all else [args.arch]
-    for arch in archs:
-        cfg = configs.get(arch)
-        shapes = ([SHAPES[args.shape]] if args.shape else shapes_for(cfg))
-        for sh in shapes:
-            meshes = [False, True] if (args.both_meshes or args.all) \
-                else [args.multi_pod]
-            for mp in meshes:
-                cells.append((arch, sh.name, mp))
 
-    os.makedirs(args.out, exist_ok=True)
-    results, failures = [], []
-    for arch, shape_name, mp in cells:
-        try:
-            rec = run_cell(arch, shape_name, mp, args.variant,
-                           hlo_dir=args.save_hlo, estimator=args.estimator,
-                           q=args.q, forward_backend=args.forward_backend)
-            results.append(rec)
-            tag = f"{arch}_{shape_name}_{'mp' if mp else 'sp'}_{args.variant}"
-            with open(os.path.join(args.out, tag + ".json"), "w") as f:
-                json.dump(rec, f, indent=1)
-        except Exception as e:  # noqa: BLE001 — report every cell
-            failures.append((arch, shape_name, mp, repr(e)[:300]))
-            print(f"FAIL [{arch} x {shape_name} x "
-                  f"{'mp' if mp else 'sp'}]: {e!r}"[:400])
-    print(f"\n{len(results)} cells passed, {len(failures)} failed")
-    for f in failures:
-        print("  FAIL:", f)
-    return 1 if failures else 0
+def main(argv=None):
+    """Shim over ``python -m repro.launch dryrun`` (launch/cli.py)."""
+    import sys
+
+    from repro.launch import cli
+    argv = list(sys.argv[1:] if argv is None else argv)
+    result = cli.main(["dryrun"] + _translate_legacy(argv))
+    return 1 if result["failures"] else 0
 
 
 if __name__ == "__main__":

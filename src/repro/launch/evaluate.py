@@ -1,5 +1,5 @@
-"""Task evaluation CLI: ``python -m repro.launch.evaluate --task sst2
---arch opt-13b --variant smoke``.
+"""Task evaluation CLI — legacy entrypoint, now a shim over the unified
+spec CLI (``python -m repro.launch evaluate``, see launch/cli.py).
 
 Modes:
   * ``--mode zeroshot``  score freshly-initialized params (the baseline
@@ -8,105 +8,56 @@ Modes:
     zero-shot and post-train metrics (best-checkpoint params, selected
     on the task metric — the SuperGLUE protocol);
   * ``--ckpt-dir <d>``   restore the latest checkpoint from a previous
-    ``launch.train`` run and score it (post-train without re-training).
+    train run and score it (post-train without re-training).
 
-``--task all`` sweeps every registered task into one report.  The report
-is JSON on stdout (and ``--out <path>``): one record per task with the
-metric protocol name, zero-shot / post-train values, and val loss.
+``--task all`` sweeps every registered task into one report.  The
+report is JSON on stdout (and ``--out <path>``): one record per task
+with the metric protocol name, zero-shot / post-train values, val loss,
+and the full experiment spec that produced it.
 """
 from __future__ import annotations
 
-import argparse
-import json
+import sys
 from typing import Optional
 
-from repro import configs, tasks
-from repro.core import zo
-from repro.train.trainer import Trainer, TrainConfig
+from repro import api
+from repro.launch import cli
 
 
 def evaluate_task(task_name: str, arch: str = "opt-13b",
                   variant: str = "smoke", mode: str = "zeroshot",
-                  steps: int = 300, batch_size: int = 32, lr: float = 1e-3,
-                  eps: float = 1e-3, sparsity: float = 0.5,
-                  estimator: str = "two_point", q: int = 1,
-                  seq_len: int = 48, n_examples: int = 256, seed: int = 0,
-                  ckpt_dir: Optional[str] = None) -> dict:
-    """One task's metric report dict (the CLI emits a list of these)."""
-    if ckpt_dir is not None and mode == "train":
-        # Trainer auto-resumes from ckpt_dir, which would silently turn
-        # "fine-tune then score" into "restore then maybe-train"
-        raise ValueError("--ckpt-dir scores an existing checkpoint; "
-                         "combine it with --mode zeroshot, not train")
-    mcfg = configs.get(arch, variant)
-    task = tasks.build(task_name, vocab=mcfg.vocab, seq_len=seq_len, seed=seed)
-    n_drop = int(sparsity * mcfg.num_layers)
-    tcfg = TrainConfig(steps=steps, batch_size=batch_size,
-                       eval_every=max(1, steps // 2), log_every=0,
-                       seed=seed, estimator=estimator, est_q=q,
-                       ckpt_dir=ckpt_dir)
-    trainer = Trainer(mcfg, task, tcfg,
-                      zo_cfg=zo.ZOConfig(eps=eps, lr=lr, n_drop=n_drop,
-                                         backend="scan"))
-    val = trainer.make_dataset(n_examples, seed_shift=1)
+                  steps: Optional[int] = None,
+                  batch_size: Optional[int] = None,
+                  lr: Optional[float] = None, eps: Optional[float] = None,
+                  sparsity: Optional[float] = None,
+                  estimator: Optional[str] = None, q: Optional[int] = None,
+                  seq_len: Optional[int] = None, n_examples: int = 256,
+                  seed: int = 0, ckpt_dir: Optional[str] = None) -> dict:
+    """One task's metric report dict (the CLI emits a list of these).
 
-    report = {"task": task.name, "kind": task.kind, "metric": task.metric,
-              "arch": arch, "variant": variant, "n_examples": n_examples,
-              "mode": mode}
-    zs_loss, zs_metric = trainer.evaluate(trainer.trainable, val,
-                                          max_examples=n_examples)
-    report["zeroshot"] = zs_metric
-    report["zeroshot_val_loss"] = zs_loss
-
-    if ckpt_dir is not None and mode != "train":
-        # score a previously trained checkpoint (restore into the template)
-        params, step, _, _ = trainer.ckpt.restore(trainer.trainable)
-        vl, metric = trainer.evaluate(params, val, max_examples=n_examples)
-        report.update(trained=metric, trained_val_loss=vl, ckpt_step=step)
-    elif mode == "train":
-        hist = trainer.train(val_data=val)
-        params = hist.get("best_params", hist["final_params"])
-        vl, metric = trainer.evaluate(params, val, max_examples=n_examples)
-        report.update(trained=metric, trained_val_loss=vl,
-                      best_step=hist.get("best_step", -1),
-                      val_metric_curve=hist["val_acc"])
-    return report
+    Library-compatible wrapper over ``api.evaluate``: ``None`` arguments
+    fall through to the shared ``default`` preset, so this function can
+    no longer disagree with the train CLI about defaults.
+    """
+    overrides = {
+        "task.name": task_name, "model.arch": arch,
+        "model.variant": variant,
+        "run.seed": seed, "run.ckpt_dir": ckpt_dir,
+    }
+    for path, val in (("model.seq_len", seq_len),
+                      ("run.steps", steps), ("run.batch_size", batch_size),
+                      ("optimizer.lr", lr), ("optimizer.eps", eps),
+                      ("optimizer.sparsity", sparsity),
+                      ("estimator.name", estimator), ("estimator.q", q)):
+        if val is not None:
+            overrides[path] = val
+    spec = api.with_overrides(api.presets.get("default"), overrides)
+    return api.evaluate(spec, mode=mode, n_examples=n_examples)
 
 
 def main(argv=None) -> list:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--task", default="all",
-                    help="registered task name, or 'all' (see repro.tasks)")
-    ap.add_argument("--arch", default="opt-13b")
-    ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
-    ap.add_argument("--mode", default="zeroshot", choices=["zeroshot", "train"])
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--batch-size", type=int, default=32)
-    ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--eps", type=float, default=1e-3)
-    ap.add_argument("--sparsity", type=float, default=0.5)
-    ap.add_argument("--estimator", default="two_point")
-    ap.add_argument("--q", type=int, default=1)
-    ap.add_argument("--seq-len", type=int, default=48)
-    ap.add_argument("--n-examples", type=int, default=256)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt-dir", default=None,
-                    help="score this checkpoint dir instead of fresh params")
-    ap.add_argument("--out", default=None, help="also write the JSON here")
-    args = ap.parse_args(argv)
-
-    names = tasks.names() if args.task == "all" else [args.task]
-    reports = [evaluate_task(
-        n, arch=args.arch, variant=args.variant, mode=args.mode,
-        steps=args.steps, batch_size=args.batch_size, lr=args.lr,
-        eps=args.eps, sparsity=args.sparsity, estimator=args.estimator,
-        q=args.q, seq_len=args.seq_len, n_examples=args.n_examples,
-        seed=args.seed, ckpt_dir=args.ckpt_dir) for n in names]
-    print(json.dumps(reports, indent=1))
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(reports, f, indent=1)
-    return reports
+    argv = list(sys.argv[1:] if argv is None else argv)
+    return cli.main(["evaluate"] + argv)
 
 
 if __name__ == "__main__":

@@ -1,89 +1,42 @@
-"""Hillclimb driver: measure one cell with optional config overrides and
-dump the dominant-term breakdown (top collectives + analyzer detail).
+"""Hillclimb driver — legacy entrypoint, now a shim over the unified
+spec CLI (``python -m repro.launch hillclimb``, see launch/cli.py).
 
-    PYTHONPATH=src python -m repro.launch.hillclimb \
+    PYTHONPATH=src python -m repro.launch hillclimb \
         --arch deepseek-coder-33b --shape train_4k \
-        --set attn_k_chunk=2048 --variant optimized
+        --cfg attn_k_chunk=2048 --lowering optimized
+
+Legacy spellings still work here: ``--set key=val`` (model-config
+override) forwards as ``--cfg``, ``--variant`` as ``--lowering`` — in
+the unified CLI ``--set`` is reserved for *spec* overrides.
 """
 import os  # noqa: E402
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=512")
 
-import argparse  # noqa: E402
-import json      # noqa: E402
+import sys  # noqa: E402
 
-from repro.launch import analysis, dryrun  # noqa: E402
+from repro.launch import cli  # noqa: E402
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--variant", default="optimized")
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--set", action="append", default=[],
-                    help="cfg override key=value (int/float/str)")
-    ap.add_argument("--estimator", default="two_point",
-                    choices=["two_point", "one_sided", "averaged",
-                             "importance"],
-                    help="project the measured cell onto this estimator")
-    ap.add_argument("--q", type=int, default=1,
-                    help="directions per step for one_sided / averaged")
-    ap.add_argument("--top", type=int, default=10)
-    ap.add_argument("--tag", default=None, help="save json under this tag")
-    args = ap.parse_args()
+def _translate_legacy(argv):
+    out = []
+    for a in argv:
+        if a == "--set":
+            out.append("--cfg")
+        elif a.startswith("--set="):
+            out.append("--cfg=" + a.split("=", 1)[1])
+        elif a == "--variant":
+            out.append("--lowering")
+        elif a.startswith("--variant="):
+            out.append("--lowering=" + a.split("=", 1)[1])
+        else:
+            out.append(a)
+    return out
 
-    overrides = {}
-    for kv in args.set:
-        k, v = kv.split("=", 1)
-        try:
-            v = int(v)
-        except ValueError:
-            try:
-                v = float(v)
-            except ValueError:
-                pass
-        overrides[k] = v
 
-    cfg, shape, mesh, lowered, compiled = dryrun.lower_cell(
-        args.arch, args.shape, args.multi_pod, args.variant, overrides)
-    txt = compiled.as_text()
-    cost = analysis.HloCost(txt).total()
-    ma = compiled.memory_analysis()
-    terms = dryrun.roofline_terms(
-        {"flops": cost.flops, "bytes accessed": cost.bytes}, ma, cost.coll,
-        mesh.devices.size)
-    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
-    print(f"\n=== {args.arch} x {args.shape} x "
-          f"{'mp' if args.multi_pod else 'sp'} x {args.variant} "
-          f"{overrides or ''} ===")
-    print(f"compute={terms['compute_s']*1e3:10.2f} ms")
-    print(f"memory ={terms['memory_s']*1e3:10.2f} ms")
-    print(f"coll   ={terms['collective_s']*1e3:10.2f} ms   dominant: {dom}")
-    if ma:
-        print(f"temp   ={ma.temp_size_in_bytes/2**30:10.2f} GiB  "
-              f"args={ma.argument_size_in_bytes/2**30:.2f} GiB")
-    proj = None
-    if args.estimator != "two_point" or args.q != 1:
-        proj = analysis.estimator_step_cost(
-            terms, args.estimator, q=args.q,
-            param_bytes=ma.argument_size_in_bytes if ma else None)
-        print(f"\nprojected for estimator={args.estimator} q={args.q} "
-              f"({proj['forwards']} forwards, {proj['axpy_sweeps']} sweeps):")
-        print(f"compute={proj['compute_s']*1e3:10.2f} ms  "
-              f"memory={proj['memory_s']*1e3:10.2f} ms  "
-              f"coll={proj['collective_s']*1e3:10.2f} ms")
-    print(f"\ntop collectives (GiB wire/device/step):")
-    for k, v in sorted(cost.detail.items(), key=lambda x: -x[1])[:args.top]:
-        print(f"  {v/2**30:9.3f}  {k[:110]}")
-    if args.tag:
-        os.makedirs("artifacts/hillclimb", exist_ok=True)
-        with open(f"artifacts/hillclimb/{args.tag}.json", "w") as f:
-            json.dump({"overrides": overrides, "terms": terms,
-                       "estimator_projection": proj,
-                       "detail": dict(sorted(cost.detail.items(),
-                                             key=lambda x: -x[1])[:30])},
-                      f, indent=1)
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    return cli.main(["hillclimb"] + _translate_legacy(argv))
 
 
 if __name__ == "__main__":

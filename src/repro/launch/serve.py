@@ -8,15 +8,10 @@ the decode_32k / long_500k cells, at CPU-runnable sizes.
 """
 from __future__ import annotations
 
-import argparse
-import time
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro import configs
-from repro.models import frontends, lm
+from repro.models import lm
 
 
 def generate(cfg, params, tokens, gen_steps: int, max_seq: int):
@@ -36,32 +31,20 @@ def generate(cfg, params, tokens, gen_steps: int, max_seq: int):
     return jnp.concatenate(out, axis=1)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="xlstm-350m")
-    ap.add_argument("--variant", default="smoke")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def main(argv=None):
+    """Shim over ``python -m repro.launch serve`` (launch/cli.py):
+    spec flags (--arch/--variant/--seed and any --set) plus the serve
+    extras --batch/--prompt-len/--gen.  The default arch moves with the
+    legacy surface via the implied override below."""
+    import sys
 
-    cfg = configs.get(args.arch, args.variant)
-    if frontends.uses_embeds(cfg):
-        raise SystemExit(f"{args.arch} takes stub embeddings; use the "
-                         "decode dry-run cell for it instead")
-    params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    tokens = jnp.asarray(rng.integers(0, cfg.vocab,
-                                      (args.batch, args.prompt_len)), jnp.int32)
-    t0 = time.perf_counter()
-    out = generate(cfg, params, tokens, args.gen,
-                   max_seq=args.prompt_len + args.gen + 1)
-    dt = time.perf_counter() - t0
-    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
-          f"gen={args.gen}: {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
-    print("sample:", np.asarray(out[0])[:12])
+    from repro.launch import cli
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not any(a == "--arch" or a.startswith("--arch=")
+               or a == "--model.arch" or a.startswith("--model.arch=")
+               for a in argv):
+        argv = ["--arch", "xlstm-350m"] + argv
+    return cli.main(["serve"] + argv)
 
 
 if __name__ == "__main__":

@@ -1,100 +1,23 @@
-"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+"""Training launcher — legacy entrypoint, now a shim over the unified
+spec CLI (``python -m repro.launch train``, see launch/cli.py).
 
-Runs real optimization steps (CPU-sized models by default) with the full
-production stack: LeZO/MeZO/FO, PEFT, checkpointing, resume, straggler
-quorum.  ``--dry`` switches to lower+compile only (see dryrun.py for the
-full grid).
+Every historical flag (``--arch --optimizer --estimator --q --lr --eps
+--sparsity --backend --forward-backend --peft --task --seq-len
+--ckpt-dir --ckpt-every --quorum --loss-shards --seed --steps
+--batch-size --out``) is accepted unchanged: they are exactly the
+generated alias flags of the spec CLI, so there is no per-command
+argparse here anymore and the defaults cannot drift from evaluate's.
 """
 from __future__ import annotations
 
-import argparse
-import json
+import sys
 
-from repro import configs
-from repro import tasks as tasks_mod
-from repro.core import zo
-from repro.estimators import costs as est_costs
-from repro.data import synthetic
-from repro.train.trainer import Trainer, TrainConfig
+from repro.launch import cli
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="opt-13b")
-    ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
-    ap.add_argument("--task", default=None,
-                    help="registry task name (repro.tasks); default: the "
-                         "legacy synthetic classification stream")
-    ap.add_argument("--optimizer", default="lezo",
-                    choices=["lezo", "mezo", "fo"])
-    ap.add_argument("--estimator", default="two_point",
-                    choices=["two_point", "one_sided", "averaged",
-                             "importance"],
-                    help="ZO gradient estimator (repro.estimators)")
-    ap.add_argument("--q", type=int, default=1,
-                    help="directions per step for one_sided / averaged")
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--batch-size", type=int, default=16)
-    ap.add_argument("--lr", type=float, default=1e-4)
-    ap.add_argument("--eps", type=float, default=1e-3)
-    ap.add_argument("--sparsity", type=float, default=0.75,
-                    help="LeZO fraction of layers dropped per step")
-    ap.add_argument("--backend", default="scan",
-                    choices=["dense", "scan", "gather", "pallas"])
-    ap.add_argument("--forward-backend", default="materialized",
-                    choices=list(est_costs.FORWARD_BACKENDS),
-                    help="materialized = classic perturb/restore sweeps; "
-                         "virtual = fused forward regenerates z in-kernel "
-                         "(Pallas; virtual_ref = pure-JAX oracle), so a ZO "
-                         "step writes params once (repro.fused)")
-    ap.add_argument("--peft", default=None, choices=[None, "lora", "prefix"])
-    ap.add_argument("--seq-len", type=int, default=64)
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=0)
-    ap.add_argument("--quorum", type=float, default=1.0)
-    ap.add_argument("--loss-shards", type=int, default=1)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default=None, help="write history JSON here")
-    args = ap.parse_args()
-
-    mcfg = configs.get(args.arch, args.variant)
-    if args.task:
-        task = tasks_mod.build(args.task, vocab=mcfg.vocab,
-                               seq_len=args.seq_len, seed=args.seed)
-    else:
-        task = synthetic.TaskConfig(vocab=mcfg.vocab, seq_len=args.seq_len,
-                                    n_classes=2, seed=args.seed)
-    n_layers = mcfg.num_layers
-    n_drop = 0 if args.optimizer == "mezo" else int(args.sparsity * n_layers)
-    tcfg = TrainConfig(
-        steps=args.steps, batch_size=args.batch_size,
-        mode="fo" if args.optimizer == "fo" else "zo",
-        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-        quorum=args.quorum, n_loss_shards=args.loss_shards,
-        peft=args.peft, seed=args.seed, eval_every=max(1, args.steps // 4),
-        estimator=args.estimator, est_q=args.q,
-        forward_backend=args.forward_backend)
-    zcfg = zo.ZOConfig(eps=args.eps, lr=args.lr, n_drop=n_drop,
-                       backend=args.backend,
-                       forward_backend=args.forward_backend)
-    trainer = Trainer(mcfg, task, tcfg, zo_cfg=zcfg)
-    hist = trainer.train()
-    summary = {
-        "arch": args.arch, "optimizer": args.optimizer,
-        "estimator": args.estimator, "q": args.q,
-        "forward_backend": args.forward_backend,
-        "task": args.task or "synthetic",
-        "metric": hist.get("metric_name", "val_loss"),
-        "n_layers": n_layers, "n_drop": n_drop,
-        "final_loss": hist["loss"][-1] if hist["loss"] else None,
-        "val_loss": hist["val_loss"], "val_acc": hist["val_acc"],
-        "best_step": hist.get("best_step"),
-    }
-    print(json.dumps(summary, indent=1))
-    if args.out:
-        hist2 = {k: v for k, v in hist.items() if not k.endswith("params")}
-        with open(args.out, "w") as f:
-            json.dump({"summary": summary, "history": hist2}, f, indent=1)
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    return cli.main(["train"] + argv)
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Dict, Optional
 
 import jax
@@ -60,7 +61,25 @@ class Trainer:
     ``tasks.CompiledTask``.  Registry tasks switch validation to the
     task's metric protocol and best-checkpoint selection to highest
     metric (the SuperGLUE protocol); synthetic tasks keep lowest
-    validation loss, the paper's protocol."""
+    validation loss, the paper's protocol.
+
+    Preferred construction is :meth:`from_spec` on a ``repro.api``
+    :class:`Experiment` — the legacy direct construction keeps working
+    bit-identically but soft-warns (DESIGN.md §11).
+    """
+
+    @classmethod
+    def from_spec(cls, spec) -> "Trainer":
+        """Build from a validated ``repro.api.Experiment``.  The derived
+        legacy configs are exactly what the old hand-wired construction
+        produced, so the step stream is bit-identical; the spec rides
+        along into every checkpoint manifest this trainer writes."""
+        from repro import api
+        d = api.derive(spec)
+        return cls(d.model_cfg, d.task, d.tcfg, zo_cfg=d.zo_cfg,
+                   fo_cfg=d.fo_cfg, lora_cfg=d.lora_cfg,
+                   prefix_cfg=d.prefix_cfg, est_cfg=d.est_cfg,
+                   _spec=spec, _derived=d)
 
     def __init__(self, model_cfg, task,
                  tcfg: TrainConfig,
@@ -68,7 +87,17 @@ class Trainer:
                  fo_cfg: fo.FOConfig = fo.FOConfig(),
                  lora_cfg: lora_mod.LoRAConfig = lora_mod.LoRAConfig(),
                  prefix_cfg: prefix_mod.PrefixConfig = prefix_mod.PrefixConfig(),
-                 est_cfg: Optional[estimators.EstimatorConfig] = None):
+                 est_cfg: Optional[estimators.EstimatorConfig] = None,
+                 _spec=None, _derived=None):
+        if _spec is None:
+            warnings.warn(
+                "legacy Trainer(model_cfg, task, tcfg, ...) construction; "
+                "prefer Trainer.from_spec(repro.api.Experiment(...)) — the "
+                "spec validates every config combination at build time and "
+                "rides along into checkpoints (DESIGN.md §11)",
+                DeprecationWarning, stacklevel=2)
+        self.experiment = _spec
+        self.derived = _derived
         self.mcfg, self.task, self.tcfg = model_cfg, task, tcfg
         if tcfg.forward_backend != "materialized":
             zo_cfg = dataclasses.replace(zo_cfg,
@@ -80,18 +109,18 @@ class Trainer:
         self.est_cfg = est_cfg or estimators.from_zo(
             zo_cfg, name=tcfg.estimator, q=tcfg.est_q)
         if self.est_cfg.forward_backend != "materialized":
+            from repro.api.validate import virtual_block_errors
             if tcfg.peft:
                 raise ValueError("forward_backend='virtual' covers "
                                  "full-parameter ZO only (no PEFT merge)")
             if tcfg.mode != "zo":
                 raise ValueError("forward_backend='virtual' requires "
                                  "mode='zo'")
-            bad = [f"{b.kind}+{b.ffn}" for s in model_cfg.stages
-                   for b in s.pattern if b.kind != "attn" or b.ffn == "moe"]
+            bad = virtual_block_errors(model_cfg)
             if bad:
                 raise ValueError(
                     "forward_backend='virtual' covers attn + dense blocks; "
-                    f"model has {sorted(set(bad))}")
+                    f"model has {bad}")
         key = jax.random.PRNGKey(tcfg.seed)
         self.base_params = lm.init_params(model_cfg, key)
 
@@ -190,6 +219,14 @@ class Trainer:
         return {k: jnp.asarray(v if n is None else v[:n])
                 for k, v in np_batch.items() if k in tasks_mod.MODEL_BATCH_KEYS}
 
+    def _ckpt_extra(self) -> Optional[Dict[str, Any]]:
+        """Spec-built trainers embed their spec in every manifest so a
+        resume can verify it is replaying the same experiment."""
+        if self.experiment is None:
+            return None
+        from repro import api
+        return {"spec": api.to_dict(self.experiment)}
+
     # ------------------------------------------------------------ train
     def train(self, train_data=None, val_data=None) -> Dict[str, Any]:
         tcfg = self.tcfg
@@ -202,6 +239,14 @@ class Trainer:
         start = 0
         params = self.trainable
         if self.ckpt and self.ckpt.latest() is not None:
+            if self.experiment is not None:
+                from repro import api
+                saved = self.ckpt.read_manifest().get(
+                    "extra", {}).get("spec")
+                if saved is not None:
+                    # loud failure with a field diff when the checkpoint
+                    # was written under a different experiment spec
+                    api.check_resume_spec(saved, self.experiment)
             params, start, _, _ = self.ckpt.restore(params)
             params = jax.tree.map(jnp.asarray, params)
             # estimator state (O(scalars), e.g. importance EMA scores) is
@@ -248,7 +293,8 @@ class Trainer:
                 if score > best[0]:
                     best = (score, jax.tree.map(np.asarray, params), t + 1)
             if self.ckpt and tcfg.ckpt_every and (t + 1) % tcfg.ckpt_every == 0:
-                self.ckpt.save(t + 1, params, int(base_seed), blocking=False)
+                self.ckpt.save(t + 1, params, int(base_seed),
+                               extra=self._ckpt_extra(), blocking=False)
         if self.ckpt:
             self.ckpt.wait()
         history["final_params"] = params

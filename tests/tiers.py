@@ -94,4 +94,19 @@ SLOW_NODE_PATTERNS = [
     "tests/test_fused.py::test_pmatmul_matches_ref[True-*",
     "tests/test_flash_kernel.py::test_flash_kernel_matches_ref[float32-True-3-64-32-64-32]",
     "tests/test_flash_kernel.py::test_flash_kernel_matches_model_flash",
+    # -- unified experiment spec (repro.api, DESIGN.md §11): the
+    #    serialization / validation / CLI-parse tests are milliseconds
+    #    and stay tier-1; the canonical two_point-materialized legacy-vs-
+    #    spec equivalence case and the train-command e2e stay tier-1 as
+    #    representatives, the rest of the matrix and the multi-run
+    #    checkpoint/sweep/shim cases are tier-2
+    "tests/test_api.py::test_legacy_vs_spec_bit_identical[two_point-virtual_ref]",
+    "tests/test_api.py::test_legacy_vs_spec_bit_identical[one_sided-*",
+    "tests/test_api.py::test_legacy_vs_spec_bit_identical[averaged-*",
+    "tests/test_api.py::test_legacy_vs_spec_bit_identical[importance-*",
+    "tests/test_api.py::test_checkpoint_embeds_spec_and_rejects_mismatch",
+    "tests/test_api.py::test_legacy_checkpoints_have_no_spec_and_still_resume",
+    "tests/test_api.py::test_sweep_returns_structured_results",
+    "tests/test_api_cli.py::test_legacy_train_shim_accepts_historical_flags",
+    "tests/test_api_cli.py::test_legacy_serve_shim_smoke",
 ]
