@@ -2,17 +2,21 @@
 #   make test-fast   - tier-1: every test not marked `slow` (<~90s on CPU);
 #                      this is what .github/workflows/ci.yml runs per push
 #   make test        - tier-2: the full suite (the ROADMAP.md verify command)
-#   make bench-smoke - fast estimator-sweep + fused-runtime benchmarks on
-#                      CPU (interpret-mode kernels), driven by the shared
-#                      `bench-smoke` spec preset; writes BENCH_fused.json
+#   make bench-smoke - fast estimator-sweep + fused-runtime + serving
+#                      benchmarks on CPU (interpret-mode kernels), driven by
+#                      the shared `bench-smoke` spec preset; writes
+#                      BENCH_fused.json and BENCH_serving.json
 #   make specs       - dump every repro.api preset to artifacts/specs/
 #                      (the serialized experiment-spec surface CI archives)
+#   make docs        - regenerate the generated docs (docs/cli.md and the
+#                      serving spec table in docs/serving.md) from the live
+#                      spec schema; idempotent, and CI fails on any diff
 #   make lint        - bytecode-compile everything (+ ruff when installed)
 
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench-smoke specs lint
+.PHONY: test test-fast bench-smoke specs docs lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -23,9 +27,13 @@ test-fast:
 bench-smoke:
 	$(PY) benchmarks/estimator_sweep.py --smoke --preset bench-smoke
 	$(PY) benchmarks/fused_forward.py --smoke --preset bench-smoke --json BENCH_fused.json
+	$(PY) benchmarks/serving.py --smoke --preset bench-smoke --json BENCH_serving.json --check
 
 specs:
 	$(PY) -m repro.launch specs --out artifacts/specs
+
+docs:
+	$(PY) -m repro.launch specs --out artifacts/specs --markdown docs
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

@@ -2,18 +2,43 @@
 
 Prints ``name,us_per_call,derived`` CSV.  See DESIGN.md §5 for the
 paper-artifact mapping.  ``--json PATH`` additionally writes the full
-trajectory (every module's rows + environment metadata) as one JSON
-file, the format CI archives (e.g. BENCH_fused.json from
-benchmarks/fused_forward.py).
+trajectory as one JSON file: every module's rows, environment metadata,
+AND every per-script ``BENCH_*.json`` artifact found on disk
+(BENCH_fused.json, BENCH_serving.json, ...) — previously those
+artifacts were written but never collected, so the aggregated
+trajectory was missing them entirely.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 sys.path.insert(0, str(Path(__file__).parent.parent))
+
+
+def collect_artifacts(root: Path, exclude: Path = None) -> dict:
+    """Every per-script BENCH_*.json under ``root``, keyed by filename;
+    unreadable files are reported, not silently dropped.  ``exclude``
+    (the aggregate being written) and any previous aggregate
+    (``"bench": "all"``) are skipped — otherwise rerunning with the
+    same --json path would nest its own prior output without bound."""
+    out = {}
+    for p in sorted(root.glob("BENCH_*.json")):
+        if exclude is not None and p.resolve() == exclude.resolve():
+            continue
+        try:
+            with open(p) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            out[p.name] = {"error": repr(e)}
+            continue
+        if isinstance(payload, dict) and payload.get("bench") == "all":
+            continue                    # someone else's aggregate
+        out[p.name] = payload
+    return out
 
 
 def main() -> None:
@@ -23,18 +48,21 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (accuracy, common, estimator_sweep, fused_forward,
-                            peft, roofline, sparsity_sweep, speedup,
+                            peft, roofline, serving, sparsity_sweep, speedup,
                             stage_breakdown, token_length, zo_momentum)
     print("name,us_per_call,derived")
     results = {}
     for mod in (stage_breakdown, fused_forward, speedup, sparsity_sweep,
                 token_length, accuracy, peft, zo_momentum, estimator_sweep,
-                roofline):
+                serving, roofline):
         print(f"# --- {mod.__name__} ---")
         rows = mod.run()
         results[mod.__name__.split(".")[-1]] = common.rows_to_json(rows)
     if args.json:
-        common.write_json(args.json, {"bench": "all", "modules": results})
+        common.write_json(args.json, {
+            "bench": "all", "modules": results,
+            "artifacts": collect_artifacts(Path.cwd(),
+                                           exclude=Path(args.json))})
 
 
 if __name__ == "__main__":

@@ -1,0 +1,189 @@
+"""Continuous batching vs lockstep serving on mixed-length traffic.
+
+The lockstep loop (launch/serve.generate) pays the convoy tax twice:
+every prompt in a batch is padded to the longest, and every lane decodes
+until the *slowest* request's budget — a batch with one 8x-longer
+generation runs 8x decode steps for everyone.  The paged engine
+(repro/serving/, DESIGN.md §12) frees lanes the moment a request
+finishes and admits the next one, so wall time tracks *total* tokens,
+not ``batches x max``.
+
+Traffic: each arrival group of ``max_lanes`` requests holds one
+long-generation request and ``lanes-1`` short ones (the convoy shape).
+Writes BENCH_serving.json — request throughput, p50/p99 latency, engine
+vs lockstep speedup — which CI uploads next to BENCH_fused.json.  The
+acceptance target is engine >= 2x lockstep request throughput
+(measured 2.0-2.6x on CPU smoke sizes, recorded in the JSON);
+``--check`` enforces the MIN_SPEEDUP regression tripwire (1.5x, below
+which continuous batching is broken, with headroom for noisy CI boxes)
+and ``make bench-smoke`` runs with it.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks import common  # noqa: E402
+from repro import api, serving  # noqa: E402
+from repro.models import lm  # noqa: E402
+
+LONG_GEN, SHORT_GENS = 64, (2, 4, 6)
+PROMPT_RANGE = (4, 16)
+MIN_SPEEDUP = 1.5     # --check tripwire; the acceptance target is 2x
+
+
+def make_traffic(rng, n_requests, lanes, vocab, long_gen, short_gens):
+    """One long-generation request per arrival group of ``lanes``."""
+    reqs = []
+    for rid in range(n_requests):
+        gen = (long_gen if rid % lanes == 0
+               else int(short_gens[rid % len(short_gens)]))
+        plen = int(rng.integers(*PROMPT_RANGE))
+        reqs.append(serving.Request(
+            rid=rid, tokens=rng.integers(0, vocab, plen).tolist(),
+            max_new_tokens=gen, seed=rid))
+    return reqs
+
+
+def make_lockstep(cfg, params, lanes, prompt_bucket, max_seq):
+    """The old loop as a *fair* baseline: arrival-order batches of
+    ``lanes``, prompts padded to one fixed bucket and caches to one
+    fixed ``max_seq``, with prefill/decode jitted ONCE up front — the
+    measured gap is pure convoy tax, not compile time (the naive
+    launch/serve.generate re-jits per call and would flatter the
+    engine)."""
+    pstep = jax.jit(lambda p, t: lm.prefill(cfg, p, t, max_seq=max_seq))
+
+    @jax.jit
+    def dstep(p, caches, tok, pos):
+        lg, caches = lm.serve_step(cfg, p, caches, tok, pos)
+        return jnp.argmax(lg, -1)[:, None].astype(jnp.int32), caches
+
+    def serve(reqs):
+        latencies, t0 = {}, time.perf_counter()
+        for base in range(0, len(reqs), lanes):
+            batch = reqs[base:base + lanes]
+            toks = np.zeros((lanes, prompt_bucket), np.int32)
+            for i, r in enumerate(batch):
+                toks[i, :len(r.tokens)] = r.tokens
+            gen = max(r.max_new_tokens for r in batch)
+            logits, caches = pstep(params, jnp.asarray(toks))
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            for s in range(gen - 1):
+                tok, caches = dstep(params, caches, tok,
+                                    jnp.int32(prompt_bucket + s))
+            jax.block_until_ready(tok)
+            done = time.perf_counter() - t0
+            for r in batch:
+                latencies[r.rid] = done   # everyone waits for the convoy
+        return time.perf_counter() - t0, latencies
+    return serve
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def run(smoke: bool = False, json_path=None, preset: str = "bench-smoke",
+        check: bool = False):
+    n_requests = 16 if smoke else 32
+    long_gen = LONG_GEN
+    # pool sized to the worst case (lanes x pages-per-request + trash):
+    # the arena rides through every bucketed call, so oversizing it is
+    # pure per-step copy tax (DESIGN.md §12)
+    spec = api.with_overrides(api.preset(preset), {
+        "model.variant": "tiny",
+        "serving.page_size": 8, "serving.n_pages": 44,
+        "serving.max_lanes": 4, "serving.prefill_chunk": 16,
+        "serving.max_seq": 96,
+        "serving.max_new_tokens": long_gen})
+    cfg = api.validate(spec)
+    sv = spec.serving
+    params = lm.init_params(cfg, jax.random.PRNGKey(spec.run.seed))
+    rng = np.random.default_rng(spec.run.seed)
+    reqs = make_traffic(rng, n_requests, sv.max_lanes, cfg.vocab,
+                        long_gen, SHORT_GENS)
+
+    # warm both paths so the comparison is steady-state, not compile time
+    warm = make_traffic(np.random.default_rng(1), sv.max_lanes,
+                        sv.max_lanes, cfg.vocab, 2, (2,))
+    engine = serving.Engine(cfg, params, sv)
+    engine.run(warm)
+    engine.n_prefill_calls = engine.n_decode_steps = 0   # report post-warm
+    lockstep = make_lockstep(cfg, params, sv.max_lanes, PROMPT_RANGE[1],
+                             max_seq=PROMPT_RANGE[1] + long_gen + 1)
+    lockstep(warm)
+
+    t0 = time.perf_counter()
+    results = engine.run(reqs)
+    dt_engine = time.perf_counter() - t0
+    lat_engine = [r.t_done - r.t_submit for r in results]
+    # -1 = old jax without _cache_size(); the promise is unobservable then
+    assert engine.n_compiles() in (2, -1), "bucket promise broken"
+
+    dt_lock, lat_lock = lockstep(reqs)
+
+    rps_e, rps_l = n_requests / dt_engine, n_requests / dt_lock
+    speedup = rps_e / rps_l
+    rows = common.emit([
+        ("serving_engine_req", dt_engine * 1e6 / n_requests,
+         f"{rps_e:.1f} req/s ({engine.n_prefill_calls} prefill + "
+         f"{engine.n_decode_steps} decode calls)"),
+        ("serving_lockstep_req", dt_lock * 1e6 / n_requests,
+         f"{rps_l:.1f} req/s"),
+        ("serving_engine_p50_ms", _pct(lat_engine, 50) * 1e3,
+         f"p99 {_pct(lat_engine, 99) * 1e3:.0f} ms"),
+        ("serving_lockstep_p50_ms", _pct(list(lat_lock.values()), 50) * 1e3,
+         f"p99 {_pct(list(lat_lock.values()), 99) * 1e3:.0f} ms"),
+        ("serving_speedup", 0.0, f"{speedup:.2f}x request throughput"),
+    ])
+    if json_path:
+        common.write_json(json_path, {
+            "bench": "serving",
+            "traffic": {"n_requests": n_requests, "long_gen": long_gen,
+                        "short_gens": list(SHORT_GENS),
+                        "prompt_range": list(PROMPT_RANGE)},
+            "engine": {"seconds": dt_engine, "req_per_s": rps_e,
+                       "p50_s": _pct(lat_engine, 50),
+                       "p99_s": _pct(lat_engine, 99),
+                       "prefill_calls": engine.n_prefill_calls,
+                       "decode_steps": engine.n_decode_steps,
+                       "compiles": engine.n_compiles()},
+            "lockstep": {"seconds": dt_lock, "req_per_s": rps_l,
+                         "p50_s": _pct(list(lat_lock.values()), 50),
+                         "p99_s": _pct(list(lat_lock.values()), 99)},
+            "speedup": speedup,
+            "rows": common.rows_to_json(rows),
+        }, spec=spec)
+    if check and speedup < MIN_SPEEDUP:
+        raise SystemExit(f"serving speedup regression: {speedup:.2f}x < "
+                         f"{MIN_SPEEDUP}x tripwire")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write BENCH_serving.json here")
+    ap.add_argument("--preset", default="bench-smoke")
+    ap.add_argument("--check", action="store_true",
+                    help=f"exit nonzero when speedup < {MIN_SPEEDUP}x "
+                         "(the continuous-batching regression tripwire)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, json_path=args.json, preset=args.preset,
+        check=args.check)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
-"""Serving example: prefill + batched greedy decode on the smoke configs
-of three different architecture families (dense GQA, MoE+MLA, xLSTM).
+"""Serving example: the continuous-batching paged engine on an attn
+arch, and the lockstep prefill+decode loop on the families the engine
+does not cover (MoE+MLA, xLSTM) — see DESIGN.md §12.
 
 Run:  PYTHONPATH=src python examples/serve_demo.py
 """
@@ -10,14 +11,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import api, configs, serving
 from repro.launch.serve import generate
 from repro.models import lm
 
-for arch in ["internlm2-1.8b", "deepseek-v2-lite-16b", "xlstm-350m"]:
+# -- paged engine: mixed-length requests share one KV arena
+cfg = configs.get("internlm2-1.8b", "smoke")
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+engine = serving.Engine(cfg, params, api.Serving(
+    page_size=4, n_pages=32, max_lanes=2, prefill_chunk=8, max_seq=64))
+reqs = [serving.Request(rid=i, tokens=rng.integers(0, cfg.vocab, n).tolist(),
+                        max_new_tokens=g, seed=i)
+        for i, (n, g) in enumerate([(24, 8), (9, 4), (17, 6)])]
+for r in sorted(engine.run(reqs), key=lambda r: r.rid):
+    print(f"{cfg.name:24s} engine rid={r.rid} prompt={r.prompt_len:2d} "
+          f"-> {r.tokens}")
+
+# -- lockstep loop: the fallback path for non-attn mixers
+for arch in ["deepseek-v2-lite-16b", "xlstm-350m"]:
     cfg = configs.get(arch, "smoke")
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     toks = jnp.asarray(np.random.default_rng(0).integers(
         0, cfg.vocab, (2, 24)), jnp.int32)
     out = generate(cfg, params, toks, gen_steps=8, max_seq=40)
-    print(f"{arch:24s} generated: {np.asarray(out[0])}")
+    print(f"{arch:24s} lockstep generated: {np.asarray(out[0])}")

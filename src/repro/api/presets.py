@@ -2,6 +2,8 @@
 defaults.  ``python -m repro.launch specs`` dumps every preset to
 ``artifacts/specs/`` (the ``make specs`` target); the golden-spec test
 pins the serialized schema byte-for-byte.
+
+Part of the unified experiment-spec surface (DESIGN.md §11).
 """
 import dataclasses
 from typing import Dict

@@ -9,6 +9,8 @@ tests/test_api.py holds that line for every estimator x forward backend.
 
 This module is imported lazily by ``repro.api`` (it pulls jax via the
 trainer); spec/validate/presets stay import-light for the CLI.
+
+Part of the unified experiment-spec surface (DESIGN.md §11).
 """
 import dataclasses
 from typing import Any, Dict, List, NamedTuple, Optional

@@ -103,6 +103,23 @@ class Runtime:
 
 
 @dataclasses.dataclass(frozen=True)
+class Serving:
+    """Continuous-batching inference engine knobs (DESIGN.md §12).
+    Pages are the cache allocation unit; buckets (``max_lanes`` decode
+    lanes, ``prefill_chunk``-token prefill calls) fix every compiled
+    shape, so the engine compiles exactly once per bucket."""
+    page_size: int = 16           # cache slots per page
+    n_pages: int = 64             # arena pages (page 0 = trash, reserved)
+    max_lanes: int = 4            # decode batch bucket (concurrent requests)
+    prefill_chunk: int = 32       # tokens per prefill call (page multiple)
+    max_seq: int = 256            # per-request cap: prompt + generation
+    max_new_tokens: int = 16      # default generation budget per request
+    temperature: float = 0.0      # 0 = greedy
+    top_k: int = 0                # 0 = full-vocab sampling
+    eos_id: Optional[int] = None  # None = stop on max_new_tokens only
+
+
+@dataclasses.dataclass(frozen=True)
 class Run:
     steps: int = 300
     batch_size: int = 16
@@ -122,20 +139,24 @@ class Experiment:
     optimizer: Optimizer = Optimizer()
     estimator: Estimator = Estimator()
     runtime: Runtime = Runtime()
+    serving: Serving = Serving()
     run: Run = Run()
 
 
 SECTIONS: Dict[str, type] = {
     "model": Model, "task": Task, "optimizer": Optimizer,
-    "estimator": Estimator, "runtime": Runtime, "run": Run,
+    "estimator": Estimator, "runtime": Runtime, "serving": Serving,
+    "run": Run,
 }
 
 # Fields a resumed run may legitimately change relative to the spec
 # embedded in its checkpoint (extend the schedule, move the ckpt dir).
+# Every serving.* field is mutable too: serving a checkpoint under a
+# different engine shape is not a training-recipe change.
 RESUME_MUTABLE = frozenset({
     "run.steps", "run.eval_every", "run.log_every",
     "run.ckpt_dir", "run.ckpt_every", "run.keep_ckpts",
-})
+}) | {f"serving.{f.name}" for f in dataclasses.fields(Serving)}
 
 
 # ------------------------------------------------------------ field access

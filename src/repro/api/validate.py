@@ -9,6 +9,8 @@ only fail here.
 
 Import-light on purpose: no jax at module scope, so the CLI can validate
 specs before the dry-run path pins XLA host-device flags.
+
+Part of the unified experiment-spec surface (DESIGN.md §11).
 """
 from typing import List, Optional
 
@@ -57,8 +59,9 @@ def validate(spec: Experiment):
     # deferred so validate stays jax-free until a spec actually needs it
     from repro.estimators import costs
 
-    m, t, o, e, rt, r = (spec.model, spec.task, spec.optimizer,
-                        spec.estimator, spec.runtime, spec.run)
+    m, t, o, e, rt, sv, r = (spec.model, spec.task, spec.optimizer,
+                             spec.estimator, spec.runtime, spec.serving,
+                             spec.run)
     mcfg = resolve_model(spec)
 
     _require(m.seq_len >= 2, "model.seq_len", f"must be >= 2, got {m.seq_len}")
@@ -141,6 +144,48 @@ def validate(spec: Experiment):
         _require(not bad, "runtime.forward_backend",
                  "'virtual' covers attn + dense blocks; "
                  f"model.arch={m.arch!r} has {bad}")
+
+    # serving engine node (DESIGN.md §12): the pool/bucket arithmetic
+    # must close before any arena is allocated
+    _require(sv.page_size >= 1, "serving.page_size",
+             f"must be >= 1, got {sv.page_size}")
+    _require(sv.n_pages >= 2, "serving.n_pages",
+             f"must be >= 2 (page 0 is the reserved trash page), "
+             f"got {sv.n_pages}")
+    _require(sv.max_lanes >= 1, "serving.max_lanes",
+             f"must be >= 1, got {sv.max_lanes}")
+    _require(sv.prefill_chunk >= 1
+             and sv.prefill_chunk % sv.page_size == 0,
+             "serving.prefill_chunk",
+             f"must be a positive multiple of serving.page_size="
+             f"{sv.page_size}, got {sv.prefill_chunk}")
+    _require(sv.max_seq >= sv.prefill_chunk
+             and sv.max_seq % sv.page_size == 0,
+             "serving.max_seq",
+             f"must be a multiple of serving.page_size={sv.page_size} "
+             f">= prefill_chunk={sv.prefill_chunk}, got {sv.max_seq}")
+    _require(sv.max_new_tokens >= 1, "serving.max_new_tokens",
+             f"must be >= 1, got {sv.max_new_tokens}")
+    _require(sv.max_new_tokens < sv.max_seq, "serving.max_new_tokens",
+             f"must leave room for a prompt inside serving.max_seq="
+             f"{sv.max_seq}, got {sv.max_new_tokens}")
+    # the pool must cover at least the smallest default-budget request
+    # (1-token prompt padded to the chunk, plus the generation budget) —
+    # otherwise every Engine.submit fails and the spec can serve nothing
+    min_span = max(sv.prefill_chunk, 1 + sv.max_new_tokens)
+    min_pages = -(-min_span // sv.page_size)
+    _require(min_pages <= sv.n_pages - 1, "serving.n_pages",
+             f"pool has {sv.n_pages - 1} usable pages (page 0 is trash) "
+             f"but the smallest default-budget request needs {min_pages} "
+             f"({min_span} slots at page_size={sv.page_size})")
+    _require(sv.temperature >= 0.0, "serving.temperature",
+             f"must be >= 0 (0 = greedy), got {sv.temperature}")
+    _require(sv.top_k >= 0, "serving.top_k",
+             f"must be >= 0 (0 = full vocab), got {sv.top_k}")
+    if sv.eos_id is not None:
+        _require(0 <= sv.eos_id < mcfg.vocab, "serving.eos_id",
+                 f"must be a {mcfg.name} vocab id in [0, {mcfg.vocab}), "
+                 f"got {sv.eos_id}")
 
     _require(r.steps >= 1, "run.steps", f"must be >= 1, got {r.steps}")
     _require(r.batch_size >= 1, "run.batch_size",

@@ -1,4 +1,7 @@
-"""Architecture registry: --arch <id> resolves here."""
+"""Architecture registry: --arch <id> resolves here.
+
+Model-zoo config (DESIGN.md §8).
+"""
 from __future__ import annotations
 
 import importlib

@@ -1,5 +1,8 @@
 """codeqwen1.5-7b [dense] — qwen1.5-arch (MHA). 32L d_model=4096 32H (kv=32)
-d_ff=13440 vocab=92416.  [hf:Qwen/CodeQwen1.5-7B; hf]"""
+d_ff=13440 vocab=92416.  [hf:Qwen/CodeQwen1.5-7B; hf]
+
+Model-zoo config (DESIGN.md §8).
+"""
 from repro.models.config import ModelConfig, dense_lm
 
 

@@ -1,5 +1,8 @@
 """deepseek-coder-33b [dense] — llama-arch. 62L d_model=7168 56H (GQA kv=8)
-d_ff=19200 vocab=32256.  [arXiv:2401.14196; hf]"""
+d_ff=19200 vocab=32256.  [arXiv:2401.14196; hf]
+
+Model-zoo config (DESIGN.md §8).
+"""
 from repro.models.config import ModelConfig, dense_lm
 
 

@@ -2,6 +2,8 @@
 
 27L d_model=2048 16H d_head=128(+64 rope) moe d_ff=1408 vocab=102400;
 layer 0 uses a dense FFN (width 10944).  [arXiv:2405.04434; hf]
+
+Model-zoo config (DESIGN.md §8).
 """
 from repro.models.config import BlockCfg, ModelConfig, StageCfg
 

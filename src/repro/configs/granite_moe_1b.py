@@ -2,6 +2,8 @@
 
 24L d_model=1024 16H (GQA kv=8) expert d_ff=512 vocab=49155.
 [hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+
+Model-zoo config (DESIGN.md §8).
 """
 from repro.models.config import BlockCfg, ModelConfig, StageCfg
 

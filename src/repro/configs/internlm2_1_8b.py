@@ -1,5 +1,8 @@
 """internlm2-1.8b [dense] — GQA. 24L d_model=2048 16H (kv=8) d_ff=8192
-vocab=92544.  [arXiv:2403.17297; hf]"""
+vocab=92544.  [arXiv:2403.17297; hf]
+
+Model-zoo config (DESIGN.md §8).
+"""
 from repro.models.config import ModelConfig, dense_lm
 
 

@@ -1,6 +1,9 @@
 """internvl2-2b [vlm] — InternViT (stub) + InternLM2-1.8B backbone.
 24L d_model=2048 16H (kv=8) d_ff=8192 vocab=92553; input_specs provides
-patch embeddings.  [arXiv:2404.16821; hf]"""
+patch embeddings.  [arXiv:2404.16821; hf]
+
+Model-zoo config (DESIGN.md §8).
+"""
 from repro.models.config import ModelConfig, dense_lm
 
 

@@ -2,6 +2,8 @@
 layer.  32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536.
 Period-8 pattern (attention at offset 4, MoE at odd offsets), repeated 4x.
 [arXiv:2403.19887; hf]
+
+Model-zoo config (DESIGN.md §8).
 """
 from repro.models.config import BlockCfg, ModelConfig, StageCfg
 

@@ -1,6 +1,9 @@
 """musicgen-large [audio] — decoder-only over EnCodec tokens; frontend
 stubbed (input_specs provides frame embeddings).  48L d_model=2048 32H
-(kv=32) d_ff=8192 vocab=2048.  [arXiv:2306.05284; hf]"""
+(kv=32) d_ff=8192 vocab=2048.  [arXiv:2306.05284; hf]
+
+Model-zoo config (DESIGN.md §8).
+"""
 from repro.models.config import ModelConfig, dense_lm
 
 

@@ -4,6 +4,8 @@ MHA, tied embeddings.  [arXiv:2205.01068]
 The paper fine-tunes OPT-1.3b / 13b / 30b with MeZO/LeZO; we reproduce the
 configs for cost analysis and provide reduced variants for CPU-scale
 convergence experiments (benchmarks/accuracy.py).
+
+Model-zoo config (DESIGN.md §8).
 """
 from repro.models.config import ModelConfig, dense_lm
 

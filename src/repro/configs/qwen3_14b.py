@@ -1,5 +1,8 @@
 """qwen3-14b [dense] — qk_norm, GQA. 40L d_model=5120 40H (kv=8) d_head=128
-d_ff=17408 vocab=151936.  [hf:Qwen/Qwen3-8B; hf]"""
+d_ff=17408 vocab=151936.  [hf:Qwen/Qwen3-8B; hf]
+
+Model-zoo config (DESIGN.md §8).
+"""
 from repro.models.config import ModelConfig, dense_lm
 
 

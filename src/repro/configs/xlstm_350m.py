@@ -2,6 +2,8 @@
 
 24L d_model=1024 4H d_ff=0 (the mLSTM block carries its own 2x projection)
 vocab=50304.  [arXiv:2405.04517; unverified]
+
+Model-zoo config (DESIGN.md §8).
 """
 from repro.models.config import BlockCfg, ModelConfig, StageCfg
 

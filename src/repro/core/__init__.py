@@ -1,3 +1,6 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""ZO core (DESIGN.md §2): counter RNG, ZOSpec + axpy plumbing,
+selection policies, memory-free adaptive ZO, and the FO baseline.
+
+Layering rule (DESIGN.md §1): this package knows nothing about models
+or training — estimators build on it, train/launch consume both.
+"""

@@ -4,6 +4,8 @@ Self-contained pytree optimizers (no optax in the container).  Used by the
 trainer for the accuracy-vs-memory comparison in benchmarks/accuracy.py:
 FO needs activations + (for AdamW) 2x parameter moments — the "12x memory"
 row of Table 1 — while ZO state is just (params, seed, step).
+
+ZO core (DESIGN.md §2).
 """
 from __future__ import annotations
 

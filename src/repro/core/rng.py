@@ -20,6 +20,8 @@ The generator is a 3-round murmur3-style finalizer over a distinct counter
 per element ("lowbias32"); two decorrelated streams feed a Box-Muller
 transform.  Statistical quality is validated in tests/test_rng.py (moments,
 cross-correlation, uniqueness across layers/leaves).
+
+ZO core (DESIGN.md §2).
 """
 from __future__ import annotations
 

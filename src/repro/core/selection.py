@@ -7,6 +7,8 @@ True means the layer is perturbed+updated this step, False means dropped
 Policies are pure functions of (seed, step) so every data-parallel replica
 — and a restarted job — derives the identical subset with no
 communication (the same property the perturbation RNG has).
+
+ZO core (DESIGN.md §2).
 """
 from __future__ import annotations
 

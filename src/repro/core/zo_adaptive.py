@@ -22,6 +22,8 @@ memory-free special case.
 
 Both are property-tested for equivalence against explicit-buffer
 reference implementations (tests/test_zo_adaptive.py).
+
+ZO core (DESIGN.md §2).
 """
 from __future__ import annotations
 

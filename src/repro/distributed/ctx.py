@@ -9,6 +9,8 @@ operand globally — 80 GiB per step on granite-moe).
 ``constrain`` is a no-op when no mesh is registered (CPU tests,
 single-device training), and silently drops axes that don't divide, so
 the same model code serves every cell of the grid.
+
+Distributed topology context (DESIGN.md §3).
 """
 from __future__ import annotations
 

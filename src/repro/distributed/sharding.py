@@ -111,6 +111,28 @@ def cache_pspec(path: str, shape, mesh: Mesh) -> P:
     return P(*spec)
 
 
+def arena_pspec(path: str, shape, mesh: Mesh) -> P:
+    """Serving KV-arena leaves (R, n_pages, page_size, KV, dh): shard the
+    *page* dim on ``model`` — the flash-decode analog of the sequence
+    rule above (pages are position-order sequence slabs), and page counts
+    are operator-chosen so divisibility is the common case.  No batch
+    axis: the arena is one shared slab every lane's page table indexes
+    into (DESIGN.md §12).  Falls back to replication like every rule
+    here."""
+    name = path.split("/")[-1]
+    nd = len(shape)
+    spec = [None] * nd
+    if name in ("k", "v") and _div(shape, 1, mesh):
+        spec[1] = "model"
+    return P(*spec)
+
+
+def arena_sharding(arena_shapes, mesh: Mesh):
+    return _tree_map_with_path(
+        lambda ps, leaf: NamedSharding(mesh, arena_pspec(ps, leaf.shape, mesh)),
+        arena_shapes)
+
+
 def data_pspec(shape, mesh: Mesh) -> P:
     ba = batch_axes(mesh)
     nb = 1

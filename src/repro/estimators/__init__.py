@@ -12,6 +12,8 @@ Estimators return :class:`DirectionSet`s — (seed, coefficient) pairs
 whose perturbations regenerate from seeds and are never materialized —
 so optimizer memory stays params + O(q) scalars under every estimator
 and every kernel backend (dense | scan | gather | pallas).
+
+Estimator subsystem (DESIGN.md §6).
 """
 from __future__ import annotations
 

@@ -10,6 +10,8 @@ z_i from its seed (the ``zo_adaptive`` trick) — state stays q scalars.
 At q=1 this is exactly two-point SPSA with an unfused restore, and
 matches :class:`TwoPointSPSA` to float rounding (asserted in
 tests/test_estimators.py).
+
+Estimator subsystem (DESIGN.md §6).
 """
 from __future__ import annotations
 

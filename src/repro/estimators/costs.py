@@ -18,6 +18,8 @@ runtime.  Counts are per optimization step:
 These counts are the contract the estimator implementations must honor
 (asserted in tests/test_estimators.py) — they are what keeps the memory
 story "params + O(q) scalars" auditable.
+
+Estimator subsystem (DESIGN.md §6).
 """
 from __future__ import annotations
 

@@ -16,6 +16,8 @@ This is a *wrapper*: it drives any inner estimator (``cfg.inner``,
 default two_point) by injecting its weighted policy as the inner's
 ``select_fn``; probing, update application, and cost counts are the
 inner estimator's own.
+
+Estimator subsystem (DESIGN.md §6).
 """
 from __future__ import annotations
 

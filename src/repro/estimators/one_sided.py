@@ -27,6 +27,8 @@ Variance of the one-sided estimate is higher per probe than antithetic
 two-point (the Hessian term (eps/2) z'Hz does not cancel), but averaging
 q probes for one extra forward — instead of q extra forward *pairs* —
 wins on compute at equal variance for q >= 2.
+
+Estimator subsystem (DESIGN.md §6).
 """
 from __future__ import annotations
 

@@ -5,6 +5,8 @@ the op sequence (perturb +eps, loss, perturb -2eps, loss, fused
 restore+update with scale ``eps - lr*g``) is unchanged, so the lowered
 XLA graph — and therefore every bit of the result — is identical to the
 seed implementation (asserted in tests/test_estimators.py).
+
+Estimator subsystem (DESIGN.md §6).
 """
 from __future__ import annotations
 

@@ -28,6 +28,8 @@ branch-free and interpret-mode exact.
 its slice of the global z with no communication (see fused/sharded.py).
 ``trans`` reads the counters through a transpose of the stored leaf —
 the tied LM head consuming ``embed/tok.T``.
+
+Fused virtual-perturbation runtime (DESIGN.md §10).
 """
 from __future__ import annotations
 

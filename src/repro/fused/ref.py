@@ -20,6 +20,8 @@ zero communication (each device generates exactly its shard of z — the
 property ``kernels/ref.py`` established for the axpy), and serves as the
 numerical reference the Pallas kernels in ``fused/matmul.py`` are
 property-tested against.
+
+Fused virtual-perturbation runtime (DESIGN.md §10).
 """
 from __future__ import annotations
 

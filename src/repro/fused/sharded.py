@@ -17,6 +17,8 @@ The ``virtual_ref`` forward backend needs none of this: the oracle is
 plain XLA ops whose iota counters partition under pjit automatically.
 These wrappers exist for running the *kernel* per shard via shard_map on
 real TPUs.
+
+Fused virtual-perturbation runtime (DESIGN.md §10).
 """
 from __future__ import annotations
 

@@ -16,6 +16,8 @@ pure-JAX oracle — same floats, ordinary XLA ops, shards under pjit.
 Vector-sized leaves (norm scale/bias) always use the oracle: an O(D)
 temp is activation-sized, and a kernel launch would cost more than the
 add.
+
+Fused virtual-perturbation runtime (DESIGN.md §10).
 """
 from __future__ import annotations
 

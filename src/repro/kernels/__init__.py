@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel backends of the ZO core (DESIGN.md §2): the fused axpy in
+four interchangeable backends (ops.py dispatch, ref.py jnp oracle,
+zo_axpy.py Pallas kernel) plus the Pallas flash-attention kernel.
+"""

@@ -23,6 +23,8 @@ Four implementations of the same contract (oracle: ``ref.zo_axpy_nd``):
 
 All backends draw identical z (same counter RNG keyed by (seed, leaf,
 global layer id)) — property-tested against each other.
+
+Kernel backends of the ZO core (DESIGN.md §2).
 """
 from __future__ import annotations
 

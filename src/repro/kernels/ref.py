@@ -8,6 +8,8 @@ counter of element (l, i1, ..., ik) is its flat index within layer l and
 the seed is fold(seed, l).  Both are computed from broadcasted iotas —
 pure element-wise ops — so under pjit every device materializes exactly
 its shard of z with no communication and no reshape/reshard.
+
+Kernel backends of the ZO core (DESIGN.md §2).
 """
 from __future__ import annotations
 

@@ -29,6 +29,8 @@ Counters restart at 0 for every (leaf, layer): uniqueness across leaves
 and layers comes from folding (leaf uid, layer index) into the seed, which
 keeps counters within uint32 for any realistic leaf and makes the value of
 z[l, i] independent of sharding.
+
+Kernel backends of the ZO core (DESIGN.md §2).
 """
 from __future__ import annotations
 

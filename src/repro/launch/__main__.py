@@ -1,4 +1,7 @@
-"""``python -m repro.launch <cmd>`` — the unified spec-driven CLI."""
+"""``python -m repro.launch <cmd>`` — the unified spec-driven CLI.
+
+Part of the unified launch surface (DESIGN.md §11).
+"""
 from repro.launch import cli
 
 if __name__ == "__main__":

@@ -19,6 +19,8 @@ recursively through the call graph with loop multipliers:
     backend; the gather backend needs no conditionals).
 
 Shapes are post-SPMD-partitioning, so everything is per-device.
+
+Benchmark/paper-artifact analysis (DESIGN.md §5).
 """
 from __future__ import annotations
 

@@ -270,23 +270,57 @@ def _cmd_serve(ns):
     spec = build_spec(ns)
     api.validate(spec)
     cfg = configs.get(spec.model.arch, spec.model.variant)
-    if frontends.uses_embeds(cfg):
+    engine_mode = ns.engine
+    if engine_mode == "auto":
+        engine_mode = "paged" if lm.supports_paged(cfg) else "lockstep"
+    if engine_mode == "paged" and not lm.supports_paged(cfg):
+        raise SystemExit(
+            f"{spec.model.arch} has non-attn mixers or a stub frontend; "
+            "the paged engine does not cover it — use --engine lockstep")
+    if engine_mode == "lockstep" and frontends.uses_embeds(cfg):
         raise SystemExit(f"{spec.model.arch} takes stub embeddings; use "
                          "the decode dry-run cell for it instead")
     params = lm.init_params(cfg, jax.random.PRNGKey(spec.run.seed))
     rng = np.random.default_rng(spec.run.seed)
-    tokens = jnp.asarray(
-        rng.integers(0, cfg.vocab, (ns.batch, ns.prompt_len)), jnp.int32)
+    tokens = rng.integers(0, cfg.vocab, (ns.batch, ns.prompt_len))
+
+    if engine_mode == "paged":
+        from repro import serving as serving_mod
+        engine = serving_mod.Engine(cfg, params, spec.serving)
+        reqs = [serving_mod.Request(rid=i, tokens=row.tolist(),
+                                    max_new_tokens=ns.gen,
+                                    seed=spec.run.seed + i)
+                for i, row in enumerate(tokens)]
+        t0 = time.perf_counter()
+        results = engine.run(reqs)
+        dt = time.perf_counter() - t0
+        out = [r.tokens for r in sorted(results, key=lambda r: r.rid)]
+        print(f"arch={cfg.name} engine=paged lanes="
+              f"{spec.serving.max_lanes} batch={ns.batch} "
+              f"prompt={ns.prompt_len} gen={ns.gen}: {dt:.2f}s "
+              f"({ns.batch * ns.gen / dt:.1f} tok/s incl. compile; "
+              f"{engine.n_prefill_calls} prefill calls, "
+              f"{engine.n_decode_steps} decode steps, "
+              f"{engine.n_compiles()} compiles)")
+        print("sample:", np.asarray(out[0])[:12])
+        return {"spec": api.to_dict(spec), "seconds": dt, "tokens": out,
+                "engine": {"mode": "paged",
+                           "prefill_calls": engine.n_prefill_calls,
+                           "decode_steps": engine.n_decode_steps,
+                           "compiles": engine.n_compiles()}}
+
+    toks = jnp.asarray(tokens, jnp.int32)
     t0 = time.perf_counter()
-    out = serve_mod.generate(cfg, params, tokens, ns.gen,
+    out = serve_mod.generate(cfg, params, toks, ns.gen,
                              max_seq=ns.prompt_len + ns.gen + 1)
     dt = time.perf_counter() - t0
-    print(f"arch={cfg.name} batch={ns.batch} prompt={ns.prompt_len} "
-          f"gen={ns.gen}: {dt:.2f}s "
+    print(f"arch={cfg.name} engine=lockstep batch={ns.batch} "
+          f"prompt={ns.prompt_len} gen={ns.gen}: {dt:.2f}s "
           f"({ns.batch * ns.gen / dt:.1f} tok/s incl. compile)")
     print("sample:", np.asarray(out[0])[:12])
     return {"spec": api.to_dict(spec), "seconds": dt,
-            "tokens": np.asarray(out).tolist()}
+            "tokens": np.asarray(out).tolist(),
+            "engine": {"mode": "lockstep"}}
 
 
 def _cmd_specs(ns):
@@ -297,6 +331,10 @@ def _cmd_specs(ns):
         with open(path, "w") as f:
             f.write(api.to_json(presets_mod.get(name)))
         written[name] = path
+    if ns.markdown:
+        from repro.launch import docgen
+        for path in docgen.write_docs(ns.markdown):
+            written[os.path.basename(path)] = path
     print(json.dumps(written, indent=1))
     return written
 
@@ -337,12 +375,23 @@ def _add_extras(cmd: str, ap: argparse.ArgumentParser):
         ap.add_argument("--tag", default=None,
                         help="save json under this tag")
     elif cmd == "serve":
-        ap.add_argument("--batch", type=int, default=4)
+        ap.add_argument("--batch", type=int, default=4,
+                        help="number of synthetic requests")
         ap.add_argument("--prompt-len", type=int, default=32)
-        ap.add_argument("--gen", type=int, default=16)
+        ap.add_argument("--gen", type=int, default=16,
+                        help="tokens generated per request")
+        ap.add_argument("--engine", default="auto",
+                        choices=["auto", "paged", "lockstep"],
+                        help="auto: continuous-batching engine when the "
+                             "arch supports it (attn mixers), else the "
+                             "legacy lockstep loop")
     elif cmd == "specs":
         ap.add_argument("--out", default="artifacts/specs",
                         help="dump every preset spec JSON here")
+        ap.add_argument("--markdown", default=None, metavar="DIR",
+                        help="also regenerate the generated docs "
+                             "(docs/cli.md + the serving spec table) "
+                             "under DIR — `make docs`")
 
 
 COMMANDS = {

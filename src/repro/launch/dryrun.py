@@ -2,6 +2,8 @@
 
 MUST be the very first lines — before any other import — since jax locks
 the device count on first init:
+
+Production-mesh lowering (DESIGN.md §3).
 """
 import os  # noqa: E402
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")

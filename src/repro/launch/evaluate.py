@@ -14,6 +14,8 @@ Modes:
 report is JSON on stdout (and ``--out <path>``): one record per task
 with the metric protocol name, zero-shot / post-train values, val loss,
 and the full experiment spec that produced it.
+
+Task evaluation surface (DESIGN.md §9, §11).
 """
 from __future__ import annotations
 

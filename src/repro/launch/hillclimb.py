@@ -8,6 +8,8 @@ spec CLI (``python -m repro.launch hillclimb``, see launch/cli.py).
 Legacy spellings still work here: ``--set key=val`` (model-config
 override) forwards as ``--cfg``, ``--variant`` as ``--lowering`` — in
 the unified CLI ``--set`` is reserved for *spec* overrides.
+
+Roofline hillclimbing (DESIGN.md §5).
 """
 import os  # noqa: E402
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")

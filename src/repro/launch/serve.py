@@ -1,10 +1,12 @@
-"""Serving launcher: prefill a batch of prompts, then batched greedy decode.
+"""Legacy serving shim + the lockstep generate loop (DESIGN.md §12).
 
-``python -m repro.launch.serve --arch xlstm-350m --variant smoke
---prompt-len 32 --gen 16``
-
-Exercises the same prefill/serve_step code paths the dry-run lowers for
-the decode_32k / long_500k cells, at CPU-runnable sizes.
+``python -m repro.launch serve`` is the real surface: it drives the
+continuous-batching paged engine (``repro.serving``) when the arch
+supports it and falls back to the lockstep ``generate`` below (one
+prompt batch in, all lanes decode in step) otherwise — which also
+exercises the prefill/serve_step code paths the dry-run lowers for the
+decode_32k / long_500k cells, at CPU-runnable sizes.  ``benchmarks/
+serving.py`` measures the two against each other.
 """
 from __future__ import annotations
 

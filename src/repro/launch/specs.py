@@ -3,6 +3,8 @@
 No device memory is ever allocated here: parameters, batches and caches
 are ``jax.ShapeDtypeStruct`` trees produced with ``jax.eval_shape``; the
 launcher lowers against them and compiles for the production mesh.
+
+Dry-run stand-ins for the production mesh (DESIGN.md §3).
 """
 from __future__ import annotations
 

@@ -7,6 +7,8 @@ Every historical flag (``--arch --optimizer --estimator --q --lr --eps
 --batch-size --out``) is accepted unchanged: they are exactly the
 generated alias flags of the spec CLI, so there is no per-command
 argparse here anymore and the defaults cannot drift from evaluate's.
+
+Part of the unified launch surface (DESIGN.md §11).
 """
 from __future__ import annotations
 

@@ -15,6 +15,8 @@ assigned architecture exactly:
 Every (stage, pattern position) is a ZO layer *group* whose parameters are
 stacked over ``repeat``; the global LeZO layer index space enumerates all
 ``sum(repeat * len(pattern))`` blocks.
+
+Model stack / zoo (DESIGN.md §8).
 """
 from __future__ import annotations
 

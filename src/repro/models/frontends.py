@@ -5,6 +5,8 @@ For `[audio]` (musicgen: EnCodec frame embeddings) and `[vlm]`
 ``input_specs()`` hands the backbone precomputed (B, S, D) embeddings.
 These helpers produce deterministic pseudo-embeddings for smoke tests and
 the matching ShapeDtypeStructs for the dry-run.
+
+Model stack / zoo (DESIGN.md §8).
 """
 from __future__ import annotations
 

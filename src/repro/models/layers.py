@@ -10,6 +10,8 @@ k-chunks with running log-sum-exp), so peak memory is O(q_chunk * k_chunk)
 instead of O(S^2) — required for the 32k-prefill shapes to fit a v5e.
 Fully-masked k-chunks are skipped with a real ``lax.cond`` branch, halving
 causal-attention FLOPs at the HLO level.
+
+Model stack (DESIGN.md §8); paged attention: DESIGN.md §12.
 """
 from __future__ import annotations
 
@@ -55,13 +57,17 @@ def norm_params(cfg, d):
 
 # ------------------------------------------------------------------ rope
 def rope(x, positions, theta=10000.0):
-    """x: (..., S, n, d) with d even; positions: (S,)."""
+    """x: (B, S, n, d) with d even; positions: (S,) shared across the
+    batch, or (B, S) per-lane (the paged serving path, where every lane
+    sits at its own decode position — DESIGN.md §12)."""
     d = x.shape[-1]
     freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=F32) / d))
-    ang = positions.astype(F32)[:, None] * freqs[None, :]        # (S, d/2)
+    ang = positions.astype(F32)[..., None] * freqs       # (S, d/2) | (B, S, d/2)
     cos, sin = jnp.cos(ang), jnp.sin(ang)
-    cos = cos[None, :, None, :]
-    sin = sin[None, :, None, :]
+    if positions.ndim == 1:
+        cos, sin = cos[None], sin[None]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
     x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
     return out.astype(x.dtype)
@@ -144,16 +150,46 @@ def decode_attention(q, k_cache, v_cache, cur_len):
     """Single-token attention over a (possibly partially filled) cache.
 
     q: (B,1,KV,G,dh); caches: (B,Smax,KV,dh); cur_len: int32 — number of
-    valid cache entries *including* the current token.
+    valid cache entries *including* the current token.  Scalar ``cur_len``
+    is the lockstep path (every lane at the same depth); a (B,) array is
+    the continuous-batching path (per-lane depths).
     """
     B, _, KV, G, dh = q.shape
     Smax = k_cache.shape[1]
     s = jnp.einsum("bqkgd,bskd->bkgqs", q, k_cache,
                    preferred_element_type=F32) * (dh ** -0.5)
-    valid = jnp.arange(Smax) < cur_len
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    cur = jnp.reshape(jnp.asarray(cur_len), (-1, 1))     # (1|B, 1)
+    valid = jnp.arange(Smax)[None, :] < cur              # (1|B, Smax)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(q.dtype), v_cache,
+                     preferred_element_type=F32)
+    return out.astype(q.dtype)
+
+
+def paged_attention(q, k, v, q_positions):
+    """Causal attention over page-gathered caches (DESIGN.md §12).
+
+    q: (B,C,KV,G,dh) — C query tokens per lane (C==1 for a decode step,
+    C==prefill_chunk for a prefill call); k/v: (B,Smax,KV,dh), the lane's
+    page table gathered back into position order, so buffer index s IS
+    absolute position s; q_positions: (B,C) absolute position per query.
+
+    The single causal test ``s <= q_position`` doubles as the validity
+    mask: pages are written front-to-back, so every position <= the
+    query's is live and everything beyond it is trash-page garbage.
+    Dense (not flash) on purpose — serving buckets keep Smax at
+    max_seq-bucket scale, and one (C, Smax) score block per lane is the
+    flash-decode memory shape anyway.
+    """
+    B, C, KV, G, dh = q.shape
+    Smax = k.shape[1]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                   preferred_element_type=F32) * (dh ** -0.5)
+    msk = jnp.arange(Smax)[None, None, :] <= q_positions[:, :, None]
+    s = jnp.where(msk[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(q.dtype), v,
                      preferred_element_type=F32)
     return out.astype(q.dtype)
 
@@ -177,12 +213,19 @@ def attn_params(cfg, key):
     return p
 
 
-def attn_fwd(cfg, p, x, *, mode, cache=None, pos=0, pc=None):
-    """mode: train | prefill | decode.  Returns (out, new_cache).
+def attn_fwd(cfg, p, x, *, mode, cache=None, pos=0, pc=None, pages=None):
+    """mode: train | prefill | decode | paged.  Returns (out, new_cache).
 
     ``pc`` (fused.LayerPerturb) switches every weight read to its
     virtually perturbed view — loss(theta + s*eps*z) with no perturbed
     weights ever materialized (DESIGN.md §10); None is the plain path.
+
+    mode="paged" is the serving engine's bucketed call (DESIGN.md §12):
+    ``cache`` holds this layer's arena slice {"k"/"v": (P, psz, KV, dh)},
+    ``pages`` is the (B, max_pages) page table (page 0 = trash), and
+    ``pos`` is a (B,) per-lane start position.  The new K/V land at
+    page ``pages[b, pos_b // psz]`` slot ``pos_b % psz``; attention then
+    gathers each lane's pages back into position order.
     """
     B, S, D = x.shape
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -203,12 +246,15 @@ def attn_fwd(cfg, p, x, *, mode, cache=None, pos=0, pc=None):
               else pc.vec(p["k_norm"]["scale"], "k_norm/scale"))
         q = rms_norm(q, qn)
         k = rms_norm(k, kn)
-    positions = pos + jnp.arange(S)
+    if mode == "paged":
+        positions = jnp.asarray(pos)[:, None] + jnp.arange(S)[None, :]
+    else:
+        positions = pos + jnp.arange(S)
     if cfg.pos_emb == "rope":
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
     q = q.reshape(B, S, KV, G, dh)
-    if mode != "decode":
+    if mode not in ("decode", "paged"):
         mesh = ctx.get_mesh()
         nm = mesh.shape.get("model", 1) if mesh is not None else 1
         if mesh is not None and KV % nm == 0:
@@ -228,7 +274,19 @@ def attn_fwd(cfg, p, x, *, mode, cache=None, pos=0, pc=None):
             k = ctx.constrain(k, "batch", None, None, None)
             v = ctx.constrain(v, "batch", None, None, None)
 
-    if mode == "decode":
+    if mode == "paged":
+        Pn, psz = cache["k"].shape[0], cache["k"].shape[1]
+        page = pages[jnp.arange(B)[:, None], positions // psz]  # (B, S)
+        flat = (page * psz + positions % psz).reshape(-1)
+        k_arena = cache["k"].reshape(Pn * psz, KV, dh).at[flat].set(
+            k.reshape(B * S, KV, dh)).reshape(Pn, psz, KV, dh)
+        v_arena = cache["v"].reshape(Pn * psz, KV, dh).at[flat].set(
+            v.reshape(B * S, KV, dh)).reshape(Pn, psz, KV, dh)
+        kg = k_arena[pages].reshape(B, -1, KV, dh)   # (B, max_pg*psz, ...)
+        vg = v_arena[pages].reshape(B, -1, KV, dh)
+        o = paged_attention(q, kg, vg, positions)
+        new_cache = {"k": k_arena, "v": v_arena}
+    elif mode == "decode":
         k_cache = lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
         v_cache = lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
         o = decode_attention(q, k_cache, v_cache, pos + 1)

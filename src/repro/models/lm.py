@@ -22,6 +22,8 @@ everything *but* them collapses).
 The LM loss is a chunked cross-entropy (scan over sequence chunks): the
 (B, S, V) logits tensor never materializes — at 152k vocab x 4k seq that
 is the difference between fitting a v5e and a 20 GiB OOM.
+
+Model stack (DESIGN.md §8); paged serving mode: DESIGN.md §12.
 """
 from __future__ import annotations
 
@@ -122,12 +124,19 @@ _MIX_FWD = {"attn": layers.attn_fwd, "mla": layers.mla_fwd,
             "slstm": ssm.slstm_fwd}
 
 
-def _run_block(cfg, b: BlockCfg, p, x, *, mode, cache, pos, pc=None):
+def _run_block(cfg, b: BlockCfg, p, x, *, mode, cache, pos, pc=None,
+               pages=None):
     if pc is not None and (b.kind != "attn" or b.ffn == "moe"):
         raise NotImplementedError(
             f"virtual perturbation covers attn + dense blocks; got "
             f"{b.kind}+{b.ffn} (use forward_backend='materialized')")
+    if mode == "paged" and b.kind != "attn":
+        raise NotImplementedError(
+            f"paged serving covers attn mixers only; got {b.kind!r} "
+            "(the engine falls back to the lockstep path — DESIGN.md §12)")
     mix_kw = {} if pc is None else {"pc": pc.child("mix")}
+    if pages is not None:
+        mix_kw["pages"] = pages
     mix_out, new_cache = _MIX_FWD[b.kind](cfg, p["mix"], x, mode=mode,
                                           cache=cache, pos=pos, **mix_kw)
     x = x + mix_out
@@ -143,11 +152,14 @@ def _run_block(cfg, b: BlockCfg, p, x, *, mode, cache, pos, pc=None):
 
 
 def forward(cfg: ModelConfig, params, tokens, *, mode="train", caches=None,
-            pos=0, embeds=None, perturb=None):
+            pos=0, embeds=None, perturb=None, pages=None):
     """tokens: (B, S) int32, or ``embeds``: (B, S, D) for stub frontends.
 
     mode: train (no cache) | prefill (build cache) | decode (S==1, use+
-    advance cache).  Returns (hidden (B,S,D), new_caches, aux_loss).
+    advance cache) | paged (serving engine bucket: ``caches`` is the
+    paged KV arena, ``pages`` the (B, max_pages) page table and ``pos``
+    a (B,) per-lane start position — DESIGN.md §12).  Returns
+    (hidden (B,S,D), new_caches, aux_loss).
 
     ``perturb`` (fused.PerturbCtx) runs the forward against the virtually
     perturbed weights theta + s*eps*z: every weight read regenerates its
@@ -165,7 +177,10 @@ def forward(cfg: ModelConfig, params, tokens, *, mode="train", caches=None,
                              perturb.scale)
     if cfg.pos_emb == "learned":
         S = x.shape[1]
-        if perturb is None:
+        if mode == "paged":
+            ppos = jnp.asarray(pos)[:, None] + jnp.arange(S)[None, :]
+            x = x + params["embed"]["pos"][ppos]
+        elif perturb is None:
             x = x + lax.dynamic_slice_in_dim(params["embed"]["pos"], pos, S, 0)
         else:
             x = x + fused_ref.ppos(params["embed"]["pos"], pos, S,
@@ -198,7 +213,8 @@ def forward(cfg: ModelConfig, params, tokens, *, mode="train", caches=None,
                       perturb.block(f"stages/s{si}/b{bj}", lid,
                                     pm[f"b{bj}"]))
                 x, nc, a = _run_block(cfg, b, bp_all[f"b{bj}"], x,
-                                      mode=mode, cache=bc, pos=pos, pc=pc)
+                                      mode=mode, cache=bc, pos=pos, pc=pc,
+                                      pages=pages)
                 aux = aux + a
                 if nc is not None:
                     ncs[f"b{bj}"] = nc
@@ -332,3 +348,55 @@ def prefill(cfg: ModelConfig, params, tokens, max_seq: int, embeds=None):
     hidden, new_caches, _ = forward(cfg, params, tokens, mode="prefill",
                                     caches=caches, pos=0, embeds=embeds)
     return logits_fn(cfg, params, hidden[:, -1]), new_caches
+
+
+# --------------------------------------------------------- paged serving
+def supports_paged(cfg: ModelConfig) -> bool:
+    """True when every mixer is attn — the block family the paged
+    serving engine covers (DESIGN.md §12); SSM/MLA state is per-lane
+    fixed-size and served by the lockstep path instead."""
+    from repro.models import frontends
+    return (not frontends.uses_embeds(cfg)
+            and all(b.kind == "attn" for s in cfg.stages for b in s.pattern))
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=None):
+    """The serving engine's KV arena: one (R, n_pages, page_size, KV, dh)
+    buffer per stage-block leaf, shared by every request via per-lane
+    page tables (DESIGN.md §12).  Page 0 is reserved as the trash page —
+    inactive lanes write there; the allocator never hands it out."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    KV, dh = cfg.n_kv_heads, cfg.head_dim
+    caches: Dict[str, Any] = {}
+    for si, st in enumerate(cfg.stages):
+        blocks = {}
+        for bj, b in enumerate(st.pattern):
+            if b.kind != "attn":
+                raise NotImplementedError(
+                    f"paged serving covers attn mixers only; "
+                    f"{cfg.name} stage {si} has {b.kind!r} "
+                    "(use the lockstep serve path)")
+            shape = (st.repeat, n_pages, page_size, KV, dh)
+            blocks[f"b{bj}"] = {"k": jnp.zeros(shape, dt),
+                                "v": jnp.zeros(shape, dt)}
+        caches[f"s{si}"] = blocks
+    return caches
+
+
+def paged_step(cfg: ModelConfig, params, arena, tokens, pages, pos, sel):
+    """One bucketed serving call — a prefill chunk or a batched decode
+    step are the same computation at different (B, C) buckets
+    (DESIGN.md §12).
+
+    tokens: (B, C) int32 — C == 1 for a decode step, C == prefill_chunk
+    for a prefill call; pages: (B, max_pages) int32 page-table rows
+    (entry 0 = trash page); pos: (B,) int32 absolute position of
+    ``tokens[:, 0]``; sel: (B,) int32 chunk index whose logits each lane
+    returns (the last valid prompt token for a final prefill chunk, 0
+    for decode).  Returns (logits (B, V) f32, new_arena).
+    """
+    hidden, new_arena, _ = forward(cfg, params, tokens, mode="paged",
+                                   caches=arena, pos=pos, pages=pages)
+    h_sel = jnp.take_along_axis(hidden, sel[:, None, None], axis=1)[:, 0]
+    return logits_fn(cfg, params, h_sel), new_arena

@@ -14,6 +14,8 @@ all-to-all); the only collective is the usual TP reduce of the FFN output.
 An expert-sharded (EP) layout is the classic alternative — for ZO
 fine-tuning the TP layout wins because perturbation touches all experts
 uniformly and the dispatch buffers never cross devices.
+
+Model stack / zoo (DESIGN.md §8).
 """
 from __future__ import annotations
 

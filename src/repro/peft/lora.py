@@ -9,6 +9,8 @@ the LoRA tree with the same group_fn.
 costs one small matmul per target per pass; no optimizer state exists
 either way (ZO stores nothing), so LoRA's benefit under ZO is *fewer
 perturbed dimensions* (lower SPSA variance), not memory.
+
+PEFT trainable subtrees (DESIGN.md §1 subsystem map).
 """
 from __future__ import annotations
 

@@ -5,6 +5,8 @@ layer (stacked over layers).  They are *injected* into the base params as
 ``pk``/``pv`` leaves, which ``layers.attn_fwd`` prepends as always-visible
 positions.  ZO perturbs only the prefix tree; LeZO's layer groups apply
 via the same stage/block paths.
+
+PEFT trainable subtrees (DESIGN.md §1 subsystem map).
 """
 from __future__ import annotations
 

@@ -1,0 +1,22 @@
+"""Continuous-batching serving engine (DESIGN.md §12).
+
+``KVPool`` allocates fixed-size cache pages out of one preallocated
+arena; ``Scheduler`` admits requests and tracks lanes; ``Engine`` drives
+the two bucketed, jitted ``models.lm.paged_step`` shapes (one compile
+per bucket) with greedy / temperature / top-k sampling off a per-request
+counter RNG.  ``python -m repro.launch serve`` is the CLI surface;
+``benchmarks/serving.py`` measures it against the lockstep loop.
+
+    from repro import serving
+
+    engine = serving.Engine(cfg, params, spec.serving)
+    results = engine.run([serving.Request(rid=0, tokens=[5, 7, 11])])
+"""
+from repro.serving.engine import Engine, EngineUnsupported, GenResult
+from repro.serving.pool import KVPool, PoolExhausted, TRASH_PAGE
+from repro.serving.sampling import make_sampler
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["Engine", "EngineUnsupported", "GenResult", "KVPool",
+           "PoolExhausted", "Request", "Scheduler", "TRASH_PAGE",
+           "make_sampler"]

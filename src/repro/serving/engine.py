@@ -1,0 +1,273 @@
+"""The continuous-batching engine: jitted paged steps over the KV pool
+(DESIGN.md §12).
+
+One engine owns one arena (``models.lm.init_paged_cache``), one pool
+(:class:`~repro.serving.pool.KVPool`), one scheduler, and exactly two
+compiled shapes of the same ``lm.paged_step`` function:
+
+  * the *prefill bucket*:  (1, prefill_chunk) tokens, one lane's row
+  * the *decode bucket*:   (max_lanes, 1) tokens, the full page table
+
+Prompts are padded to the chunk bucket and streamed in chunk-by-chunk,
+interleaved with decode steps (one chunk per engine step), so a long
+admission never stalls the running lanes for more than one chunk's
+latency.  Inactive decode lanes ride along pointed at the trash page —
+the batch shape never changes, so nothing ever recompiles after warmup.
+
+The arena is donated through every call so XLA may update pages in
+place; where the layer scan forces a fresh output buffer the cost is one
+arena-sized copy per call — which is why the pool should be sized to the
+workload's worst case, not padded "to be safe" (benchmarks/serving.py
+measures the copy tax directly; recorded in DESIGN.md §12).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.serving import sampling
+from repro.serving.pool import KVPool
+from repro.serving.scheduler import DECODE, Lane, Request, Scheduler
+
+
+class EngineUnsupported(NotImplementedError):
+    """The model's block family is outside the paged engine's coverage
+    (SSM/MLA mixers, stub frontends) — serve it with the lockstep path."""
+
+
+@dataclasses.dataclass
+class GenResult:
+    rid: int
+    tokens: List[int]                # generated ids (prompt excluded)
+    prompt_len: int
+    t_submit: float
+    t_admit: float
+    t_first: float                   # first generated token (prefill done)
+    t_done: float
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token."""
+        return self.t_first - self.t_submit
+
+
+class Engine:
+    """Drive ``spec.serving`` over a model: submit() requests, step()
+    until drained (or just run())."""
+
+    def __init__(self, cfg, params, serving, mesh=None, clock=None):
+        if not lm.supports_paged(cfg):
+            kinds = sorted({b.kind for s in cfg.stages for b in s.pattern})
+            raise EngineUnsupported(
+                f"{cfg.name}: paged serving covers attn mixers only, "
+                f"got {kinds}; use the lockstep serve path")
+        self.cfg = cfg
+        self.params = params
+        self.serving = serving
+        self.clock = clock or time.perf_counter
+        # learned position tables are finite: the engine cannot place a
+        # token beyond them, whatever serving.max_seq asks for
+        max_seq = serving.max_seq
+        if cfg.pos_emb == "learned":
+            max_seq = min(max_seq,
+                          serving.page_size
+                          * (cfg.max_seq // serving.page_size))
+        self.pool = KVPool(serving.n_pages, serving.page_size)
+        self.sched = Scheduler(self.pool, max_lanes=serving.max_lanes,
+                               prefill_chunk=serving.prefill_chunk,
+                               max_seq=max_seq)
+        self.arena = lm.init_paged_cache(cfg, serving.n_pages,
+                                         serving.page_size)
+        sample = sampling.make_sampler(serving.temperature, serving.top_k)
+
+        def pstep(p, a, t, pg, pos, sel, seeds, spos):
+            # prefill bucket; sampling fused in so the final chunk's
+            # first token comes back in the same dispatch
+            logits, a2 = lm.paged_step(cfg, p, a, t, pg, pos, sel)
+            return sample(logits, seeds, spos), a2
+
+        def dstep(p, a, t, pg, pos, seeds):
+            # decode bucket: token/position state stays ON DEVICE between
+            # steps — the returned (toks, pos) feed the next call as-is,
+            # so a steady-state decode step uploads nothing (host arrays
+            # are rebuilt only when the lane set changes)
+            B = pos.shape[0]
+            logits, a2 = lm.paged_step(cfg, p, a, t, pg, pos,
+                                       jnp.zeros((B,), jnp.int32))
+            nxt = sample(logits, seeds, pos + 1)
+            return nxt[:, None], pos + 1, a2
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.distributed import ctx, sharding
+            ctx.set_mesh(mesh)
+            a_shard = sharding.arena_sharding(
+                jax.eval_shape(lambda: lm.init_paged_cache(
+                    cfg, serving.n_pages, serving.page_size)), mesh)
+            p_shard = sharding.params_sharding(
+                cfg, jax.eval_shape(lambda: lm.init_params(
+                    cfg, jax.random.PRNGKey(0))), mesh)
+            repl = NamedSharding(mesh, P())
+            self._pstep = jax.jit(pstep, donate_argnums=(1,),
+                                  in_shardings=(p_shard, a_shard, repl,
+                                                repl, repl, repl, repl,
+                                                repl),
+                                  out_shardings=(repl, a_shard))
+            self._dstep = jax.jit(dstep, donate_argnums=(1,),
+                                  in_shardings=(p_shard, a_shard, repl,
+                                                repl, repl, repl),
+                                  out_shardings=(repl, repl, a_shard))
+        else:
+            self._pstep = jax.jit(pstep, donate_argnums=(1,))
+            self._dstep = jax.jit(dstep, donate_argnums=(1,))
+        self.n_prefill_calls = 0
+        self.n_decode_steps = 0
+        self._t_submit: Dict[int, float] = {}
+        self._decode_dirty = True        # device lane state needs rebuild
+        self._d_toks = self._d_table = self._d_pos = self._d_seeds = None
+
+    # ----------------------------------------------------------- compiles
+    def n_compiles(self) -> int:
+        """Compiled shapes behind the paged steps — stays at <= 2 (one
+        per bucket) for the engine's whole life; the bench asserts it."""
+        try:
+            return self._pstep._cache_size() + self._dstep._cache_size()
+        except AttributeError:  # pragma: no cover - older jax
+            return -1
+
+    # ------------------------------------------------------------- submit
+    def submit(self, req: Request):
+        if req.max_new_tokens is None:   # spec default for the budget
+            req = dataclasses.replace(
+                req, max_new_tokens=self.serving.max_new_tokens)
+        self.sched.submit(req)           # validates span vs pool/table
+        self._t_submit[req.rid] = self.clock()
+
+    # --------------------------------------------------------------- step
+    def step(self) -> List[GenResult]:
+        """One engine iteration: admit, one prefill chunk, one batched
+        decode step.  Returns the requests that finished this iteration."""
+        sched = self.sched
+        while sched.try_admit(now=self.clock()) is not None:
+            pass
+
+        # -- chunked prefill: one chunk for the oldest prefilling lane
+        # (admission order, NOT lane index — a later admission into a
+        # lower lane must not overtake an in-progress prefill)
+        pre = sched.prefilling()
+        if pre:
+            i = min(pre, key=lambda j: sched.lanes[j].admit_seq)
+            lane = sched.lanes[i]
+            c = sched.prefill_chunk
+            start = lane.next_chunk * c
+            chunk = np.zeros((1, c), np.int32)
+            lo = min(start + c, lane.prompt_len)
+            if lo > start:
+                chunk[0, :lo - start] = np.asarray(
+                    lane.req.tokens[start:lo], np.int32)
+            final = start + c >= lane.padded_len
+            sel = (min(lane.prompt_len - 1 - start, c - 1) if final else 0)
+            toks, self.arena = self._pstep(
+                self.params, self.arena, jnp.asarray(chunk),
+                jnp.asarray(np.asarray(sched.page_row(lane),
+                                       np.int32)[None]),
+                jnp.asarray([start], jnp.int32),
+                jnp.asarray([sel], jnp.int32),
+                jnp.asarray([lane.req.seed], jnp.uint32),
+                jnp.asarray([lane.prompt_len], jnp.int32))
+            self.n_prefill_calls += 1
+            lane.next_chunk += 1
+            lane.pos = min(start + c, lane.padded_len)
+            if final:
+                tok = int(toks[0])
+                lane.t_first = self.clock()
+                lane.out.append(tok)
+                lane.last_token = tok
+                lane.pos = lane.prompt_len
+                lane.state = DECODE
+                self._decode_dirty = True
+
+        # -- batched decode over every decoding lane (fixed bucket)
+        finished: List[GenResult] = []
+        dec = sched.decoding()
+        live = [i for i in dec if not self._done(sched.lanes[i])]
+        for i in sorted(set(dec) - set(live)):
+            finished.append(self._retire(i))
+        if live:
+            B = sched.max_lanes
+            if self._decode_dirty:
+                toks = np.zeros((B, 1), np.int32)
+                table = np.zeros((B, sched.table_width), np.int32)
+                pos = np.zeros((B,), np.int32)
+                seeds = np.zeros((B,), np.uint32)
+                for i in live:
+                    lane = sched.lanes[i]
+                    toks[i, 0] = lane.last_token
+                    table[i] = sched.page_row(lane)
+                    pos[i] = lane.pos
+                    seeds[i] = lane.req.seed
+                self._d_toks = jnp.asarray(toks)
+                self._d_table = jnp.asarray(table)
+                self._d_pos = jnp.asarray(pos)
+                self._d_seeds = jnp.asarray(seeds)
+                self._decode_dirty = False
+            self._d_toks, self._d_pos, self.arena = self._dstep(
+                self.params, self.arena, self._d_toks, self._d_table,
+                self._d_pos, self._d_seeds)
+            self.n_decode_steps += 1
+            nxt = np.asarray(self._d_toks)[:, 0]
+            for i in live:
+                lane = sched.lanes[i]
+                tok = int(nxt[i])
+                lane.out.append(tok)
+                lane.last_token = tok
+                lane.pos += 1
+                if self._done(lane):
+                    finished.append(self._retire(i))
+        return finished
+
+    def _done(self, lane: Lane) -> bool:
+        eos = self.serving.eos_id
+        return (len(lane.out) >= lane.req.max_new_tokens
+                or (eos is not None and lane.out and lane.out[-1] == eos))
+
+    def _retire(self, i: int) -> GenResult:
+        self._decode_dirty = True        # lane composition changed
+        lane = self.sched.finish(i)      # pages return to the pool now
+        return GenResult(rid=lane.req.rid, tokens=list(lane.out),
+                         prompt_len=lane.prompt_len,
+                         t_submit=self._t_submit.pop(lane.req.rid, 0.0),
+                         t_admit=lane.t_admit, t_first=lane.t_first,
+                         t_done=self.clock())
+
+    # ---------------------------------------------------------------- run
+    def run(self, requests: Sequence[Request]) -> List[GenResult]:
+        """Drain ``requests``: submit everything, step until idle.
+        Results come back in finish order (not submit order).  Finished
+        results are handed to the caller, never retained — a long-lived
+        engine stays O(active lanes), not O(requests ever served)."""
+        for r in requests:
+            self.submit(r)
+        results: List[GenResult] = []
+        guard = 0
+        while self.sched.busy:
+            before = (self.n_prefill_calls, self.n_decode_steps,
+                      len(results), len(self.sched.queue))
+            results.extend(self.step())
+            after = (self.n_prefill_calls, self.n_decode_steps,
+                     len(results), len(self.sched.queue))
+            guard = guard + 1 if before == after else 0
+            if guard > 2:    # admission blocked with nothing running
+                raise RuntimeError(
+                    "engine stalled: queue head needs "
+                    "more pool pages than will ever free up")
+        return results

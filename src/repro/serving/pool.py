@@ -1,0 +1,88 @@
+"""Paged KV-cache pool: fixed-size pages over one preallocated arena
+(DESIGN.md §12).
+
+The *arena* is the device-side slab (``models.lm.init_paged_cache``):
+per stage-block, (R, n_pages, page_size, KV, dh) buffers shared by every
+request.  The *pool* is the host-side allocator over page ids — pure
+Python, no jax — so the scheduler's admit/finish bookkeeping is testable
+without a device and the property suite can drive random traces against
+the invariants directly.
+
+Invariants (``check_invariants`` asserts them; the hypothesis trace test
+in tests/test_serving.py hammers them):
+
+  * free ∪ allocated == {1 .. n_pages-1}, disjoint — page 0 is reserved
+    as the *trash page* (inactive lanes write there; see lm.paged_step)
+    and is never handed out.
+  * ``free(p)`` of a page not currently allocated raises (double-free).
+  * ``alloc(n)`` either returns exactly n distinct pages or raises
+    :class:`PoolExhausted` leaving the pool untouched.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+TRASH_PAGE = 0
+
+
+class PoolExhausted(RuntimeError):
+    """alloc() could not cover the request; the pool is unchanged."""
+
+
+class KVPool:
+    """Host-side page allocator over ``n_pages`` fixed-size pages."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError(f"n_pages must be >= 2 (page 0 is the trash "
+                             f"page), got {n_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        # LIFO free list: recently freed pages are reused first, which
+        # keeps the hot arena slice small and cache-friendly.
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._used: set = set()
+
+    # ------------------------------------------------------------- alloc
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._used)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache slots."""
+        return -(-n_tokens // self.page_size)
+
+    def alloc(self, n: int) -> List[int]:
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"need {n} pages, {len(self._free)} free "
+                f"({len(self._used)} in use of {self.n_pages - 1} usable)")
+        pages = [self._free.pop() for _ in range(n)]
+        self._used.update(pages)
+        return pages
+
+    def free(self, pages: Sequence[int]):
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"double-free or foreign page {p} "
+                                 f"(in_use={sorted(self._used)})")
+            self._used.remove(p)
+            self._free.append(p)
+
+    # -------------------------------------------------------- invariants
+    def check_invariants(self):
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        assert not (free & self._used), "page both free and allocated"
+        assert TRASH_PAGE not in free and TRASH_PAGE not in self._used, \
+            "trash page entered circulation"
+        assert free | self._used == set(range(1, self.n_pages)), \
+            "page leaked out of the pool"

@@ -1,0 +1,46 @@
+"""Per-request counter-RNG sampling: greedy / temperature / top-k
+(DESIGN.md §12).
+
+The key for a sampled token is ``fold_in(PRNGKey(request.seed),
+absolute_position)`` — a pure function of (request, position), never of
+which lane or decode batch happened to serve the token.  The same
+request therefore samples the same continuation whether it rode a full
+batch, a lonely lane, or a re-run after preemption; the engine's
+reproducibility test pins this.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_sampler(temperature: float, top_k: int):
+    """Build the jitted sampler for one engine: ``fn(logits (B, V) f32,
+    seeds (B,) uint32, positions (B,) int32) -> (B,) int32``.
+
+    ``temperature == 0`` is greedy (argmax; seeds unused).  ``top_k > 0``
+    restricts sampling to the k highest logits.  One sampler per engine,
+    so the two decode buckets stay at exactly one compile each.
+    """
+    if temperature < 0:
+        raise ValueError(f"temperature must be >= 0, got {temperature}")
+    if top_k < 0:
+        raise ValueError(f"top_k must be >= 0, got {top_k}")
+
+    if temperature == 0.0:
+        @jax.jit
+        def greedy(logits, seeds, positions):
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy
+
+    @jax.jit
+    def sample(logits, seeds, positions):
+        if top_k > 0:
+            kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+            logits = jnp.where(logits >= kth, logits, -jnp.inf)
+
+        def one(lg, seed, position):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), position)
+            return jax.random.categorical(key, lg / temperature)
+        return jax.vmap(one)(logits, seeds, positions).astype(jnp.int32)
+    return sample

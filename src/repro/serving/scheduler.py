@@ -1,0 +1,169 @@
+"""Continuous-batching scheduler: admission, lanes, page-table state
+(DESIGN.md §12).
+
+Pure host-side bookkeeping — no jax — so the admit/finish state machine
+is property-testable on its own (tests/test_serving.py drives random
+traces and asserts the pool invariants after every transition).
+
+Policy (recorded trade-offs in DESIGN.md §12):
+
+  * FIFO with head-of-line blocking: the queue head admits only when a
+    lane is free AND the pool can cover its *worst case* (padded prompt
+    plus ``max_new_tokens``).  Reserve-ahead means a running request can
+    never exhaust the pool mid-decode, so there is no preemption path to
+    get wrong — at the cost of utilization when requests finish early.
+  * One lane per request; a lane is PREFILL while its prompt chunks are
+    streaming in (interleaved with decode steps by the engine), DECODE
+    once it has sampled its first token, and is retired on EOS /
+    max-tokens, returning its pages to the pool immediately.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Sequence
+
+from repro.serving.pool import KVPool, TRASH_PAGE
+
+PREFILL, DECODE = "prefill", "decode"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``seed`` feeds the per-request counter
+    RNG, so sampled output is reproducible no matter which lane or batch
+    composition serves it.  ``max_new_tokens=None`` means "the engine's
+    ``serving.max_new_tokens`` default" — resolved at ``Engine.submit``."""
+    rid: int
+    tokens: Sequence[int]              # prompt token ids
+    max_new_tokens: Optional[int] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if len(self.tokens) < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens is not None and self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens must be "
+                             f">= 1, got {self.max_new_tokens}")
+
+
+@dataclasses.dataclass
+class Lane:
+    req: Request
+    pages: List[int]
+    prompt_len: int
+    padded_len: int                    # prompt padded to the chunk bucket
+    state: str = PREFILL
+    next_chunk: int = 0                # next prefill chunk index
+    pos: int = 0                       # cache slots filled so far
+    last_token: Optional[int] = None   # token the next decode step feeds
+    out: List[int] = dataclasses.field(default_factory=list)
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    admit_seq: int = 0                 # admission order (FIFO tiebreak)
+
+
+class Scheduler:
+    def __init__(self, pool: KVPool, *, max_lanes: int, prefill_chunk: int,
+                 max_seq: int):
+        if prefill_chunk % pool.page_size:
+            raise ValueError(f"prefill_chunk={prefill_chunk} must be a "
+                             f"multiple of page_size={pool.page_size}")
+        if max_seq % pool.page_size:
+            raise ValueError(f"max_seq={max_seq} must be a multiple of "
+                             f"page_size={pool.page_size}")
+        self.pool = pool
+        self.max_lanes = max_lanes
+        self.prefill_chunk = prefill_chunk
+        self.max_seq = max_seq
+        self.table_width = max_seq // pool.page_size
+        self.lanes: List[Optional[Lane]] = [None] * max_lanes
+        self.queue: Deque[Request] = deque()
+        self._admit_seq = 0
+
+    # ---------------------------------------------------------- capacity
+    def padded_prompt(self, prompt_len: int) -> int:
+        c = self.prefill_chunk
+        return -(-prompt_len // c) * c
+
+    def span(self, req: Request) -> int:
+        """Worst-case cache slots the request can touch: the padded
+        prefill writes, then decode writes up to prompt+max_new."""
+        return max(self.padded_prompt(len(req.tokens)),
+                   len(req.tokens) + req.max_new_tokens)
+
+    def submit(self, req: Request):
+        if req.max_new_tokens is None:
+            raise ValueError(f"request {req.rid}: max_new_tokens unresolved "
+                             "— submit through Engine.submit, which applies "
+                             "the serving.max_new_tokens default")
+        span = self.span(req)
+        if span > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: needs {span} cache slots > "
+                f"serving.max_seq={self.max_seq} (prompt {len(req.tokens)} "
+                f"+ max_new {req.max_new_tokens})")
+        if self.pool.pages_for(span) > self.pool.n_pages - 1:
+            raise ValueError(
+                f"request {req.rid}: needs {self.pool.pages_for(span)} "
+                f"pages > pool capacity {self.pool.n_pages - 1}")
+        self.queue.append(req)
+
+    # --------------------------------------------------------- admission
+    def free_lane(self) -> Optional[int]:
+        for i, lane in enumerate(self.lanes):
+            if lane is None:
+                return i
+        return None
+
+    def try_admit(self, now: float = 0.0) -> Optional[int]:
+        """Admit the queue head if a lane is free and the pool covers its
+        worst case.  FIFO: a blocked head blocks everything behind it."""
+        if not self.queue:
+            return None
+        i = self.free_lane()
+        if i is None:
+            return None
+        req = self.queue[0]
+        n = self.pool.pages_for(self.span(req))
+        if n > self.pool.available:
+            return None
+        self.queue.popleft()
+        self._admit_seq += 1
+        self.lanes[i] = Lane(req=req, pages=self.pool.alloc(n),
+                             prompt_len=len(req.tokens),
+                             padded_len=self.padded_prompt(len(req.tokens)),
+                             t_admit=now, admit_seq=self._admit_seq)
+        return i
+
+    # ------------------------------------------------------------ retire
+    def finish(self, i: int) -> Lane:
+        """Retire lane ``i``: its pages return to the pool immediately."""
+        lane = self.lanes[i]
+        assert lane is not None, f"finish on empty lane {i}"
+        self.pool.free(lane.pages)
+        self.lanes[i] = None
+        return lane
+
+    # -------------------------------------------------------- page table
+    def page_row(self, lane: Lane) -> List[int]:
+        """The lane's page-table row, trash-padded to ``table_width``."""
+        row = list(lane.pages[:self.table_width])
+        row += [TRASH_PAGE] * (self.table_width - len(row))
+        return row
+
+    def trash_row(self) -> List[int]:
+        return [TRASH_PAGE] * self.table_width
+
+    # ------------------------------------------------------------- views
+    def prefilling(self) -> List[int]:
+        return [i for i, l in enumerate(self.lanes)
+                if l is not None and l.state == PREFILL]
+
+    def decoding(self) -> List[int]:
+        return [i for i, l in enumerate(self.lanes)
+                if l is not None and l.state == DECODE]
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(l is not None for l in self.lanes)

@@ -18,6 +18,8 @@ full[:, 1:], as everywhere else in the repo):
 Prompts are right-aligned (truncated from the front) so the tokens
 nearest the answer survive truncation; continuations/answers are
 left-aligned and PAD-padded, with the loss/score mask excluding PAD.
+
+Task registry & metric protocol (DESIGN.md §9).
 """
 from __future__ import annotations
 

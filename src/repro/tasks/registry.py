@@ -6,6 +6,8 @@ three metric protocols (accuracy, macro-F1, exact match) and both signal
 families (lexicon / overlap, see generators.py).  ``register`` accepts
 new specs at runtime, e.g. JSON-file-backed tasks built with
 ``generators.json_examples``.
+
+Task registry & metric protocol (DESIGN.md §9).
 """
 from __future__ import annotations
 

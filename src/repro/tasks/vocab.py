@@ -12,6 +12,8 @@ Hashing is stable across processes and sessions (pure integer FNV), so a
 dataset compiled from the same (spec, vocab, seq_len, seed) is
 bit-identical everywhere — the same property core/rng.py gives the
 perturbation stream.
+
+Task registry & metric protocol (DESIGN.md §9).
 """
 from __future__ import annotations
 

@@ -1,0 +1,115 @@
+"""Documentation gates (fast tier, no jax).
+
+Two families:
+
+  * generated-doc freshness — docs/cli.md and the serving spec table in
+    docs/serving.md must match what the live schema generates (`make
+    docs`), the same pattern as the golden spec JSON: change the schema
+    without regenerating and this fails before CI's docs-freshness job
+    does.
+  * module-docstring audit — every module under src/repro/ carries a
+    docstring citing its DESIGN.md section, and every §N cited anywhere
+    in a module docstring exists in DESIGN.md (no dangling citations).
+"""
+import ast
+import os
+import re
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+DOCS = os.path.join(REPO, "docs")
+SRC = os.path.join(REPO, "src", "repro")
+
+
+def _read(*parts):
+    with open(os.path.join(*parts)) as f:
+        return f.read()
+
+
+# ------------------------------------------------------------- freshness
+def test_cli_md_fresh():
+    from repro.launch import docgen
+    assert _read(DOCS, "cli.md") == docgen.cli_markdown(), (
+        "docs/cli.md is stale — run `make docs`")
+
+
+def test_serving_md_spec_table_fresh():
+    from repro.launch import docgen
+    text = _read(DOCS, "serving.md")
+    assert docgen.inject(text, docgen.serving_spec_markdown()) == text, (
+        "docs/serving.md generated span is stale — run `make docs`")
+
+
+def test_docgen_idempotent_and_deterministic():
+    from repro.launch import docgen
+    one, two = docgen.cli_markdown(), docgen.cli_markdown()
+    assert one == two
+    injected = docgen.inject(_read(DOCS, "serving.md"),
+                             docgen.serving_spec_markdown())
+    assert docgen.inject(injected, docgen.serving_spec_markdown()) \
+        == injected
+
+
+def test_inject_requires_markers():
+    from repro.launch import docgen
+    with pytest.raises(ValueError, match="marker"):
+        docgen.inject("no markers here", "x")
+
+
+def test_cli_md_covers_every_command_and_spec_field():
+    from repro import api
+    from repro.launch import cli
+    text = _read(DOCS, "cli.md")
+    for cmd in cli.COMMANDS:
+        assert f"### `{cmd}`" in text, f"command {cmd} undocumented"
+    for path in api.field_paths():
+        assert f"`{path}`" in text, f"spec field {path} undocumented"
+    for flag in cli.ALIASES:
+        assert flag in text, f"alias {flag} undocumented"
+
+
+# -------------------------------------------------------- docstring audit
+def _design_sections():
+    return set(re.findall(r"^## §(\d+)", _read(REPO, "DESIGN.md"), re.M))
+
+
+def _modules():
+    for root, _, files in os.walk(SRC):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                yield os.path.join(root, fn)
+
+
+def test_every_module_has_docstring_citing_design():
+    missing, uncited = [], []
+    for path in _modules():
+        rel = os.path.relpath(path, REPO)
+        ds = ast.get_docstring(ast.parse(_read(path)))
+        if not ds:
+            missing.append(rel)
+        elif "DESIGN.md" not in ds:
+            uncited.append(rel)
+    assert not missing, f"modules without a docstring: {missing}"
+    assert not uncited, f"module docstrings not naming their DESIGN.md " \
+                        f"section: {uncited}"
+
+
+def test_no_dangling_design_citations():
+    valid = _design_sections()
+    assert valid, "DESIGN.md has no §N sections?"
+    dangling = []
+    for path in _modules():
+        ds = ast.get_docstring(ast.parse(_read(path))) or ""
+        for sec in re.findall(r"§\s*(\d+)", ds):
+            if sec not in valid:
+                dangling.append((os.path.relpath(path, REPO), f"§{sec}"))
+    assert not dangling, f"citations of nonexistent DESIGN sections: " \
+                         f"{dangling}"
+
+
+def test_docs_cite_only_existing_design_sections():
+    valid = _design_sections()
+    for doc in ("serving.md", "cli.md"):
+        for sec in re.findall(r"§(\d+)", _read(DOCS, doc)):
+            assert sec in valid, f"docs/{doc} cites nonexistent §{sec}"

@@ -1,0 +1,380 @@
+"""Serving engine suite (DESIGN.md §12).
+
+Tiers: the pool/scheduler property tests and spec validation are pure
+host-side and stay tier-1; the engine bit-identity gate keeps one fast
+representative (opt-smoke) in tier-1 and the heavier cases (rope arch,
+sampling reproducibility, EOS, CLI e2e) in tier-2 via tests/tiers.py.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st  # optional-hypothesis shim
+
+from repro import api
+from repro.serving import (KVPool, PoolExhausted, Request, Scheduler,
+                           TRASH_PAGE)
+
+
+# ------------------------------------------------------------------ pool
+def test_pool_alloc_free_roundtrip():
+    pool = KVPool(n_pages=8, page_size=4)
+    assert pool.available == 7          # page 0 reserved
+    a = pool.alloc(3)
+    assert len(set(a)) == 3 and TRASH_PAGE not in a
+    assert pool.in_use == 3 and pool.available == 4
+    pool.free(a)
+    assert pool.in_use == 0 and pool.available == 7
+    pool.check_invariants()
+
+
+def test_pool_exhaustion_leaves_pool_untouched():
+    pool = KVPool(n_pages=4, page_size=4)
+    a = pool.alloc(2)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(2)                   # only 1 free
+    assert pool.available == 1 and pool.in_use == 2
+    pool.free(a)
+    pool.check_invariants()
+
+
+def test_pool_double_free_raises():
+    pool = KVPool(n_pages=4, page_size=4)
+    a = pool.alloc(1)
+    pool.free(a)
+    with pytest.raises(ValueError, match="double-free"):
+        pool.free(a)
+    with pytest.raises(ValueError, match="double-free|foreign"):
+        pool.free([TRASH_PAGE])
+    pool.check_invariants()
+
+
+def test_pool_never_hands_out_trash_page():
+    pool = KVPool(n_pages=5, page_size=2)
+    pages = pool.alloc(4)               # drain it completely
+    assert TRASH_PAGE not in pages
+    pool.check_invariants()
+
+
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 5)), max_size=60),
+       st.integers(2, 24))
+@settings(max_examples=60, deadline=None)
+def test_pool_random_trace_no_leak_no_double_free(trace, n_pages):
+    """Random alloc/free traces: the pool invariants hold after every
+    transition and a full drain restores every page."""
+    pool = KVPool(n_pages=n_pages, page_size=4)
+    held = []
+    for is_alloc, n in trace:
+        if is_alloc:
+            try:
+                held.append(pool.alloc(n))
+            except PoolExhausted:
+                assert n > pool.available
+        elif held:
+            pool.free(held.pop(n % len(held)))
+        pool.check_invariants()
+    for pages in held:
+        pool.free(pages)
+    pool.check_invariants()
+    assert pool.in_use == 0 and pool.available == n_pages - 1
+
+
+# -------------------------------------------------------------- scheduler
+def _sched(n_pages=32, page_size=4, max_lanes=3, prefill_chunk=8,
+           max_seq=64):
+    return Scheduler(KVPool(n_pages, page_size), max_lanes=max_lanes,
+                     prefill_chunk=prefill_chunk, max_seq=max_seq)
+
+
+def test_scheduler_rejects_oversized_request():
+    s = _sched(max_seq=32)
+    with pytest.raises(ValueError, match="max_seq"):
+        s.submit(Request(rid=0, tokens=[1] * 30, max_new_tokens=10))
+
+
+def test_scheduler_admits_reserve_ahead_and_frees_on_finish():
+    s = _sched(n_pages=9, page_size=4, max_lanes=2)
+    s.submit(Request(rid=0, tokens=[1] * 8, max_new_tokens=8))   # 4 pages
+    s.submit(Request(rid=1, tokens=[1] * 8, max_new_tokens=8))   # 4 pages
+    s.submit(Request(rid=2, tokens=[1] * 8, max_new_tokens=8))
+    assert s.try_admit() == 0 and s.try_admit() == 1
+    assert s.try_admit() is None        # pool drained: 8 of 8 reserved
+    s.pool.check_invariants()
+    s.finish(0)
+    assert s.try_admit() == 0           # freed pages re-admit the head
+    assert s.pool.in_use == 8
+
+
+def test_scheduler_fifo_head_of_line_blocks():
+    s = _sched(n_pages=9, page_size=4, max_lanes=3)
+    s.submit(Request(rid=0, tokens=[1] * 8, max_new_tokens=24))  # 8 pages
+    s.submit(Request(rid=1, tokens=[1] * 4, max_new_tokens=4))   # 2 pages
+    assert s.try_admit() == 0
+    assert s.try_admit() is None        # head (rid 1) needs 2 > 0 free
+    assert s.queue[0].rid == 1          # ...and stays queued, unskipped
+
+
+def test_scheduler_page_row_trash_padded():
+    s = _sched()
+    s.submit(Request(rid=0, tokens=[1] * 4, max_new_tokens=4))
+    lane = s.lanes[s.try_admit()]
+    row = s.page_row(lane)
+    assert len(row) == s.table_width
+    assert row[len(lane.pages):] == [TRASH_PAGE] * (s.table_width
+                                                    - len(lane.pages))
+
+
+@given(st.lists(st.tuples(st.integers(1, 20), st.integers(1, 12),
+                          st.integers(0, 2)), min_size=1, max_size=30))
+@settings(max_examples=40, deadline=None)
+def test_scheduler_random_admit_finish_trace(reqs):
+    """Random submit/admit/finish interleavings never leak or double-free
+    a page, and draining every lane returns the pool to full."""
+    s = _sched(n_pages=48, page_size=4, max_lanes=4, max_seq=64)
+    rng = np.random.default_rng(sum(p for p, _, _ in reqs))
+    for rid, (plen, gen, _) in enumerate(reqs):
+        s.submit(Request(rid=rid, tokens=[1] * plen, max_new_tokens=gen))
+    while s.busy:
+        progressed = s.try_admit() is not None
+        active = [i for i, l in enumerate(s.lanes) if l is not None]
+        if active and (not progressed or rng.integers(2)):
+            s.finish(int(rng.choice(active)))
+            progressed = True
+        s.pool.check_invariants()
+        if not progressed and not active:
+            break                       # head blocked with empty lanes
+    assert s.pool.in_use == sum(
+        len(l.pages) for l in s.lanes if l is not None)
+    s.pool.check_invariants()
+
+
+# ------------------------------------------------------- spec validation
+def test_serving_spec_validation_errors():
+    base = api.preset("tiny-smoke")
+    for path, bad, frag in [
+            ("serving.page_size", 0, "page_size"),
+            ("serving.n_pages", 1, "trash page"),
+            ("serving.max_lanes", 0, "max_lanes"),
+            ("serving.prefill_chunk", 12, "multiple"),
+            ("serving.max_seq", 20, "multiple"),
+            ("serving.max_new_tokens", 0, "max_new_tokens"),
+            ("serving.max_new_tokens", 512, "room for a prompt"),
+            ("serving.temperature", -0.5, "greedy"),
+            ("serving.top_k", -1, "top_k"),
+            ("serving.eos_id", 10 ** 9, "vocab"),
+            # pool that can never cover even the smallest request
+            ("serving.n_pages", 2, "usable pages")]:
+        with pytest.raises(api.SpecError, match=path.split(".")[1]):
+            api.validate(api.with_overrides(base, {path: bad}))
+
+
+def test_serving_fields_are_resume_mutable():
+    from repro.api import spec as spec_mod
+    a = spec_mod.to_dict(api.preset("tiny-smoke"))
+    b = spec_mod.to_dict(api.with_overrides(
+        api.preset("tiny-smoke"), {"serving.max_lanes": 16,
+                                   "serving.n_pages": 128}))
+    assert spec_mod.spec_diff(a, b) == ()   # serving never blocks resume
+
+
+# ---------------------------------------------------------------- engine
+def _lockstep_reference(cfg, params, tokens, gen):
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.launch import serve as serve_mod
+    out = serve_mod.generate(cfg, params,
+                             jnp.asarray(np.asarray(tokens)[None],
+                                         jnp.int32),
+                             gen, max_seq=64)
+    return np.asarray(out)[0].tolist()
+
+
+@pytest.fixture(scope="module")
+def opt_smoke():
+    import jax
+    from repro import configs
+    from repro.models import lm
+    cfg = configs.get("opt-13b", "smoke")
+    return cfg, lm.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, **over):
+    from repro import serving
+    kw = dict(page_size=4, n_pages=32, max_lanes=3, prefill_chunk=8,
+              max_seq=64)
+    kw.update(over)
+    return serving.Engine(cfg, params, api.Serving(**kw))
+
+
+def test_engine_greedy_bit_identical_to_lockstep(opt_smoke):
+    """The acceptance gate: every request's engine output equals the
+    single-sequence lockstep path token-for-token, whatever lane/batch
+    composition served it — and the whole run stays at one compile per
+    bucket."""
+    cfg, params = opt_smoke
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(3, 18))).tolist(),
+                    max_new_tokens=int(rng.integers(2, 7)), seed=i)
+            for i in range(5)]
+    eng = _engine(cfg, params)
+    results = {r.rid: r for r in eng.run(reqs)}
+    assert sorted(results) == [0, 1, 2, 3, 4]
+    for req in reqs:
+        assert results[req.rid].tokens == _lockstep_reference(
+            cfg, params, req.tokens, req.max_new_tokens), req.rid
+    assert eng.n_compiles() == 2
+    assert eng.pool.in_use == 0
+    eng.pool.check_invariants()
+
+
+def test_engine_bit_identical_on_rope_arch():
+    import jax
+    from repro import configs
+    from repro.models import lm
+    cfg = configs.get("internlm2-1.8b", "smoke")
+    params = lm.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i, tokens=rng.integers(0, cfg.vocab, n).tolist(),
+                    max_new_tokens=g, seed=i)
+            for i, (n, g) in enumerate([(13, 5), (7, 4), (21, 3)])]
+    eng = _engine(cfg, params)
+    for r in eng.run(reqs):
+        req = reqs[r.rid]
+        assert r.tokens == _lockstep_reference(cfg, params, req.tokens,
+                                               req.max_new_tokens)
+
+
+def test_engine_sampling_reproducible_across_batch_composition(opt_smoke):
+    """temperature>0: a request's sampled continuation is a pure function
+    of (seed, position) — identical served alone or in a full batch."""
+    cfg, params = opt_smoke
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, n).tolist()
+               for n in (9, 14, 5, 11)]
+    mk = lambda: [Request(rid=i, tokens=p, max_new_tokens=6, seed=100 + i)
+                  for i, p in enumerate(prompts)]
+    full = {r.rid: r.tokens for r in _engine(
+        cfg, params, temperature=0.8, top_k=8).run(mk())}
+    for i in range(len(prompts)):
+        alone = _engine(cfg, params, temperature=0.8, top_k=8).run(
+            [mk()[i]])
+        assert alone[0].tokens == full[i], f"rid {i} drifted with batch"
+
+
+def test_engine_eos_stops_early_and_frees_pages(opt_smoke):
+    cfg, params = opt_smoke
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, 9).tolist()
+    ref = _engine(cfg, params).run(
+        [Request(rid=0, tokens=prompt, max_new_tokens=8)])[0].tokens
+    eos = ref[3]
+    eng = _engine(cfg, params, eos_id=int(eos))
+    out = eng.run([Request(rid=0, tokens=prompt, max_new_tokens=8)])[0]
+    stop = ref.index(eos)
+    assert out.tokens == ref[:stop + 1]     # truncated at first EOS
+    assert eng.pool.in_use == 0
+
+
+def test_engine_rejects_unsupported_arch():
+    from repro import configs, serving
+    cfg = configs.get("xlstm-350m", "smoke")
+    with pytest.raises(serving.EngineUnsupported, match="attn mixers"):
+        serving.Engine(cfg, None, api.Serving())
+
+
+def test_engine_interleaves_prefill_with_decode(opt_smoke):
+    """A multi-chunk admission must not stall running decode lanes for
+    more than one chunk: decode steps keep advancing while the long
+    prompt streams in."""
+    cfg, params = opt_smoke
+    rng = np.random.default_rng(4)
+    eng = _engine(cfg, params, prefill_chunk=8, max_seq=64, n_pages=48)
+    eng.submit(Request(rid=0, tokens=rng.integers(0, cfg.vocab, 4).tolist(),
+                       max_new_tokens=12))
+    while not eng.sched.decoding():     # get lane 0 decoding first
+        eng.step()
+    d0 = eng.n_decode_steps
+    eng.submit(Request(rid=1,                       # 4 prefill chunks
+                       tokens=rng.integers(0, cfg.vocab, 30).tolist(),
+                       max_new_tokens=2))
+    for _ in range(4):
+        eng.step()
+    assert eng.n_decode_steps >= d0 + 4  # decode never paused
+    eng.run([])                          # drain
+
+
+def test_engine_applies_spec_max_new_tokens_default(opt_smoke):
+    """A Request without max_new_tokens takes serving.max_new_tokens —
+    the spec knob must actually steer generation, and raw Scheduler use
+    refuses an unresolved budget."""
+    cfg, params = opt_smoke
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, 6).tolist()
+    eng = _engine(cfg, params, max_new_tokens=5)
+    out = eng.run([Request(rid=0, tokens=prompt)])
+    assert len(out[0].tokens) == 5
+    with pytest.raises(ValueError, match="unresolved"):
+        _sched().submit(Request(rid=1, tokens=prompt))
+
+
+def test_prefill_serves_oldest_admission_first(opt_smoke):
+    """FIFO must hold across lanes: a later admission landing in a
+    lower-index lane may not steal prefill chunks from an in-progress
+    older request."""
+    cfg, params = opt_smoke
+    rng = np.random.default_rng(6)
+    eng = _engine(cfg, params, max_lanes=2, prefill_chunk=8, n_pages=48,
+                  max_seq=64)
+    # R0: one-step request that frees lane 0 immediately; A: 4-chunk
+    # prompt admitted into lane 1 the same step
+    eng.submit(Request(rid=0, tokens=rng.integers(0, cfg.vocab, 4).tolist(),
+                       max_new_tokens=1))
+    eng.submit(Request(rid=1, tokens=rng.integers(0, cfg.vocab, 30).tolist(),
+                       max_new_tokens=2))
+    eng.step()                                   # R0 in & out, A waits
+    assert eng.sched.lanes[0] is None
+    eng.submit(Request(rid=2, tokens=rng.integers(0, cfg.vocab, 4).tolist(),
+                       max_new_tokens=2))        # admitted into lane 0
+    eng.step()
+    a, b = eng.sched.lanes[1], eng.sched.lanes[0]
+    assert a is not None and a.next_chunk == 1   # oldest got the chunk
+    assert b is not None and b.next_chunk == 0   # newcomer waited
+    eng.run([])
+
+
+def test_engine_reusable_without_result_accumulation(opt_smoke):
+    """run() hands results to the caller and retains nothing — a second
+    run on the same engine returns only its own requests."""
+    cfg, params = opt_smoke
+    rng = np.random.default_rng(7)
+    eng = _engine(cfg, params)
+    mk = lambda rid: Request(rid=rid,
+                             tokens=rng.integers(0, cfg.vocab, 6).tolist(),
+                             max_new_tokens=2)
+    assert len(eng.run([mk(0), mk(1)])) == 2
+    second = eng.run([mk(2)])
+    assert [r.rid for r in second] == [2]
+    assert eng.pool.in_use == 0
+
+
+def test_docgen_handles_bare_target_dir(tmp_path, capsys):
+    from repro.launch import docgen
+    written = docgen.write_docs(str(tmp_path))
+    assert (tmp_path / "cli.md").exists()
+    assert not (tmp_path / "serving.md").exists()    # skipped, not crashed
+    assert len(written) == 1
+    assert "skipped" in capsys.readouterr().out
+
+
+def test_cli_serve_paged_e2e(capsys):
+    from repro.launch import cli
+    result = cli.main(["serve", "--arch", "opt-13b", "--variant", "smoke",
+                       "--batch", "2", "--prompt-len", "8", "--gen", "3",
+                       "--set", "serving.page_size=4",
+                       "--set", "serving.prefill_chunk=8",
+                       "--set", "serving.max_seq=64"])
+    assert result["engine"]["mode"] == "paged"
+    assert result["engine"]["compiles"] == 2
+    assert [len(t) for t in result["tokens"]] == [3, 3]
+    assert "tok/s" in capsys.readouterr().out
