@@ -2,10 +2,12 @@
 #   make test-fast   - tier-1: every test not marked `slow` (<~90s on CPU);
 #                      this is what .github/workflows/ci.yml runs per push
 #   make test        - tier-2: the full suite (the ROADMAP.md verify command)
-#   make bench-smoke - fast estimator-sweep + fused-runtime + serving
-#                      benchmarks on CPU (interpret-mode kernels), driven by
-#                      the shared `bench-smoke` spec preset; writes
-#                      BENCH_fused.json and BENCH_serving.json
+#   make bench-smoke - fast estimator-sweep + fused-runtime + serving +
+#                      stage-breakdown benchmarks on CPU (interpret-mode
+#                      kernels), driven by the shared `bench-smoke` spec
+#                      preset; writes BENCH_fused.json, BENCH_serving.json,
+#                      BENCH_step.json (+ a sample obs span trace) and
+#                      gates every artifact's tripwires via run.py --check
 #   make specs       - dump every repro.api preset to artifacts/specs/
 #                      (the serialized experiment-spec surface CI archives)
 #   make docs        - regenerate the generated docs (docs/cli.md and the
@@ -28,6 +30,8 @@ bench-smoke:
 	$(PY) benchmarks/estimator_sweep.py --smoke --preset bench-smoke
 	$(PY) benchmarks/fused_forward.py --smoke --preset bench-smoke --json BENCH_fused.json
 	$(PY) benchmarks/serving.py --smoke --preset bench-smoke --json BENCH_serving.json --check
+	$(PY) benchmarks/step_time.py --smoke --preset bench-smoke --json BENCH_step.json --jsonl BENCH_step_trace.jsonl --check
+	$(PY) benchmarks/run.py --collect-only --check
 
 specs:
 	$(PY) -m repro.launch specs --out artifacts/specs

@@ -4,9 +4,17 @@ Prints ``name,us_per_call,derived`` CSV.  See DESIGN.md §5 for the
 paper-artifact mapping.  ``--json PATH`` additionally writes the full
 trajectory as one JSON file: every module's rows, environment metadata,
 AND every per-script ``BENCH_*.json`` artifact found on disk
-(BENCH_fused.json, BENCH_serving.json, ...) — previously those
-artifacts were written but never collected, so the aggregated
-trajectory was missing them entirely.
+(BENCH_fused.json, BENCH_serving.json, BENCH_step.json, ...) —
+previously those artifacts were written but never collected, so the
+aggregated trajectory was missing them entirely.
+
+``--check`` turns the collected artifacts into a CI gate: any artifact
+may carry a ``tripwires`` block (``{name: {ok, value, limit, ...}}`` —
+benchmarks/step_time.py and benchmarks/serving.py write one) and a
+single failed tripwire exits nonzero with every failure listed.
+``--collect-only`` skips re-running the suite and just aggregates +
+checks what's already on disk (the CI bench-smoke job runs the
+individual scripts, then this as the gate).
 """
 from __future__ import annotations
 
@@ -41,28 +49,61 @@ def collect_artifacts(root: Path, exclude: Path = None) -> dict:
     return out
 
 
+def tripwire_failures(artifacts: dict) -> list:
+    """-> [(artifact_name, tripwire_name, record)] for every tripwire
+    with ``ok`` falsy in any collected artifact's ``tripwires`` block."""
+    bad = []
+    for aname, payload in sorted(artifacts.items()):
+        if not isinstance(payload, dict):
+            continue
+        for tname, rec in sorted(payload.get("tripwires", {}).items()):
+            if not (isinstance(rec, dict) and rec.get("ok")):
+                bad.append((aname, tname, rec))
+    return bad
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write all rows as a JSON trajectory file")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero when any collected BENCH_*.json "
+                         "artifact carries a failed tripwire")
+    ap.add_argument("--collect-only", action="store_true",
+                    help="skip running the suite; aggregate/check the "
+                         "BENCH_*.json artifacts already on disk")
     args = ap.parse_args()
 
-    from benchmarks import (accuracy, common, estimator_sweep, fused_forward,
-                            peft, roofline, serving, sparsity_sweep, speedup,
-                            stage_breakdown, token_length, zo_momentum)
-    print("name,us_per_call,derived")
     results = {}
-    for mod in (stage_breakdown, fused_forward, speedup, sparsity_sweep,
-                token_length, accuracy, peft, zo_momentum, estimator_sweep,
-                serving, roofline):
-        print(f"# --- {mod.__name__} ---")
-        rows = mod.run()
-        results[mod.__name__.split(".")[-1]] = common.rows_to_json(rows)
+    if not args.collect_only:
+        from benchmarks import (accuracy, common, estimator_sweep,
+                                fused_forward, peft, roofline, serving,
+                                sparsity_sweep, speedup, stage_breakdown,
+                                step_time, token_length, zo_momentum)
+        print("name,us_per_call,derived")
+        for mod in (stage_breakdown, step_time, fused_forward, speedup,
+                    sparsity_sweep, token_length, accuracy, peft,
+                    zo_momentum, estimator_sweep, serving, roofline):
+            print(f"# --- {mod.__name__} ---")
+            rows = mod.run()
+            results[mod.__name__.split(".")[-1]] = common.rows_to_json(rows)
+
+    artifacts = collect_artifacts(
+        Path.cwd(), exclude=Path(args.json) if args.json else None)
     if args.json:
+        from benchmarks import common
         common.write_json(args.json, {
-            "bench": "all", "modules": results,
-            "artifacts": collect_artifacts(Path.cwd(),
-                                           exclude=Path(args.json))})
+            "bench": "all", "modules": results, "artifacts": artifacts})
+    if args.check:
+        bad = tripwire_failures(artifacts)
+        for aname, tname, rec in bad:
+            rec = rec or {}
+            print(f"TRIPWIRE {aname}:{tname} value={rec.get('value')!r} "
+                  f"limit={rec.get('limit')!r} ({rec.get('note', '')})",
+                  file=sys.stderr)
+        if bad:
+            raise SystemExit(f"bench tripwires failed: {len(bad)}")
+        print(f"tripwires ok across {len(artifacts)} artifact(s)")
 
 
 if __name__ == "__main__":

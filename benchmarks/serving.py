@@ -162,6 +162,11 @@ def run(smoke: bool = False, json_path=None, preset: str = "bench-smoke",
                          "p50_s": _pct(list(lat_lock.values()), 50),
                          "p99_s": _pct(list(lat_lock.values()), 99)},
             "speedup": speedup,
+            "tripwires": {"serving_speedup": {
+                "ok": speedup >= MIN_SPEEDUP, "value": speedup,
+                "limit": MIN_SPEEDUP,
+                "note": "engine vs lockstep request throughput "
+                        "(continuous batching broken below this)"}},
             "rows": common.rows_to_json(rows),
         }, spec=spec)
     if check and speedup < MIN_SPEEDUP:

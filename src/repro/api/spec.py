@@ -120,6 +120,22 @@ class Serving:
 
 
 @dataclasses.dataclass(frozen=True)
+class Telemetry:
+    """``repro.obs`` wiring (DESIGN.md §13): stage-level step tracing,
+    serving metrics, and the optional jax profiler hook.  Disabled by
+    default — the hot paths then pay the zero-allocation null tracer.
+    Every field is resume-mutable: turning telemetry on (or moving a
+    sink) is not a training-recipe change."""
+    enabled: bool = False
+    ring: int = 4096              # in-memory span ring capacity (0 = off)
+    fence: bool = False           # block_until_ready at span exit (true
+                                  # stage timings; serializes dispatch)
+    jsonl: Optional[str] = None   # JSONL span/event log path
+    prometheus: Optional[str] = None  # metrics text-dump path
+    profile_dir: Optional[str] = None  # jax.profiler trace dir
+
+
+@dataclasses.dataclass(frozen=True)
 class Run:
     steps: int = 300
     batch_size: int = 16
@@ -140,23 +156,27 @@ class Experiment:
     estimator: Estimator = Estimator()
     runtime: Runtime = Runtime()
     serving: Serving = Serving()
+    telemetry: Telemetry = Telemetry()
     run: Run = Run()
 
 
 SECTIONS: Dict[str, type] = {
     "model": Model, "task": Task, "optimizer": Optimizer,
     "estimator": Estimator, "runtime": Runtime, "serving": Serving,
-    "run": Run,
+    "telemetry": Telemetry, "run": Run,
 }
 
 # Fields a resumed run may legitimately change relative to the spec
 # embedded in its checkpoint (extend the schedule, move the ckpt dir).
 # Every serving.* field is mutable too: serving a checkpoint under a
-# different engine shape is not a training-recipe change.
+# different engine shape is not a training-recipe change.  Likewise
+# every telemetry.* field — observing a run differently never changes
+# what the run computes (the obs no-interference rule, DESIGN.md §13).
 RESUME_MUTABLE = frozenset({
     "run.steps", "run.eval_every", "run.log_every",
     "run.ckpt_dir", "run.ckpt_every", "run.keep_ckpts",
-}) | {f"serving.{f.name}" for f in dataclasses.fields(Serving)}
+}) | {f"serving.{f.name}" for f in dataclasses.fields(Serving)} \
+  | {f"telemetry.{f.name}" for f in dataclasses.fields(Telemetry)}
 
 
 # ------------------------------------------------------------ field access

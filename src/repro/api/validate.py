@@ -59,9 +59,9 @@ def validate(spec: Experiment):
     # deferred so validate stays jax-free until a spec actually needs it
     from repro.estimators import costs
 
-    m, t, o, e, rt, sv, r = (spec.model, spec.task, spec.optimizer,
-                             spec.estimator, spec.runtime, spec.serving,
-                             spec.run)
+    m, t, o, e, rt, sv, tel, r = (spec.model, spec.task, spec.optimizer,
+                                  spec.estimator, spec.runtime,
+                                  spec.serving, spec.telemetry, spec.run)
     mcfg = resolve_model(spec)
 
     _require(m.seq_len >= 2, "model.seq_len", f"must be >= 2, got {m.seq_len}")
@@ -186,6 +186,25 @@ def validate(spec: Experiment):
         _require(0 <= sv.eos_id < mcfg.vocab, "serving.eos_id",
                  f"must be a {mcfg.name} vocab id in [0, {mcfg.vocab}), "
                  f"got {sv.eos_id}")
+
+    # telemetry node (DESIGN.md §13): sinks only make sense on an
+    # enabled tracer — a configured-but-dark sink is a silent data loss
+    # bug waiting to be "discovered" after a week-long run
+    _require(tel.ring >= 0, "telemetry.ring",
+             f"must be >= 0 (0 = no ring buffer), got {tel.ring}")
+    if not tel.enabled:
+        for path, val in (("telemetry.fence", tel.fence),
+                          ("telemetry.jsonl", tel.jsonl),
+                          ("telemetry.prometheus", tel.prometheus),
+                          ("telemetry.profile_dir", tel.profile_dir)):
+            _require(not val, path,
+                     "configured while telemetry.enabled=false — the "
+                     "sink would silently record nothing; set "
+                     "telemetry.enabled=true (or clear this field)")
+    if tel.enabled:
+        _require(tel.ring > 0 or bool(tel.jsonl), "telemetry.ring",
+                 "telemetry.enabled=true needs at least one span sink: "
+                 "a ring capacity > 0 or a telemetry.jsonl path")
 
     _require(r.steps >= 1, "run.steps", f"must be >= 1, got {r.steps}")
     _require(r.batch_size >= 1, "run.batch_size",

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 
 from repro.core import rng, selection
 from repro.kernels import ops as kops
+from repro.obs import trace as obs
 
 
 def _path_str(path) -> str:
@@ -191,6 +192,7 @@ def uniform_select(spec: ZOSpec, seed, n_drop: int):
 def tree_axpy(params, spec: ZOSpec, seed, scale, masks, idxs=None, *,
               decay=1.0, backend="dense", interpret=True):
     """theta <- decay*theta + scale*z on active layers, identity elsewhere."""
+    obs.get_tracer().count(obs.CTR_AXPY)
     leaves, treedef = jax.tree_util.tree_flatten(params)
     assert len(leaves) == len(spec.paths), "params tree changed since build_spec"
     out = []

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import rng, zo
 from repro.estimators import costs
+from repro.obs import trace as obs
 
 _DIR_SALT = 0xD16E  # folds the direction index into the step seed
 
@@ -114,10 +115,16 @@ class Estimator:
         """-> (masks: {g: (L_g,) bool}, idxs: {g: (k_g,) int32} | None,
         n_active)."""
         if self._select is not None:
-            return self._select(seed, state)
-        if self.cfg.policy == "stratified":
-            return zo.stratified_select(self.spec, seed, self.cfg.n_drop)
-        return zo.uniform_select(self.spec, seed, self.cfg.n_drop)
+            sel = self._select(seed, state)
+        elif self.cfg.policy == "stratified":
+            sel = zo.stratified_select(self.spec, seed, self.cfg.n_drop)
+        else:
+            sel = zo.uniform_select(self.spec, seed, self.cfg.n_drop)
+        tr = obs.get_tracer()
+        if tr.enabled and not obs.tracing():
+            tr.count(obs.CTR_SELECTS)
+            tr.gauge(obs.GAUGE_ACTIVE, int(sel[2]))
+        return sel
 
     # ------------------------------------------------------------ state
     def init_state(self) -> Dict:
@@ -167,15 +174,17 @@ class Estimator:
         """theta <- decay*theta - lr * sum_i coeffs[i] * z_i, as q fused
         axpy passes (restore folded into the single pass when q == 1)."""
         q = len(dirs)
-        if self.cfg.fused_update and q == 1 and dirs.restore[0] != 0.0:
-            return self._ax(params, dirs.restore[0] - lr * dirs.coeffs[0],
-                            dirs.seeds[0], dirs.masks[0], dirs.idxs[0], decay)
-        params = self.restore_probe(params, dirs)
-        for i in range(q):
-            params = self._ax(params, -lr * dirs.coeffs[i], dirs.seeds[i],
-                              dirs.masks[i], dirs.idxs[i],
-                              decay if i == 0 else 1.0)
-        return params
+        with obs.get_tracer().span(obs.UPDATE) as sp:
+            if self.cfg.fused_update and q == 1 and dirs.restore[0] != 0.0:
+                return sp.fence(self._ax(
+                    params, dirs.restore[0] - lr * dirs.coeffs[0],
+                    dirs.seeds[0], dirs.masks[0], dirs.idxs[0], decay))
+            params = self.restore_probe(params, dirs)
+            for i in range(q):
+                params = self._ax(params, -lr * dirs.coeffs[i], dirs.seeds[i],
+                                  dirs.masks[i], dirs.idxs[i],
+                                  decay if i == 0 else 1.0)
+            return sp.fence(params)
 
     def step_counts(self) -> Dict:
         """Analytic per-step cost counts (see estimators/costs.py)."""

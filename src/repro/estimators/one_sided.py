@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from repro.core import zo
 from repro.estimators.base import DirectionSet, Estimator, direction_seeds
+from repro.obs import trace as obs
 
 
 class OneSidedBatched(Estimator):
@@ -51,7 +52,9 @@ class OneSidedBatched(Estimator):
         idxs = tuple(s[1] for s in sels)
         n_active = sels[0][2]
 
-        l0 = loss_fn(params, batch)
+        tr = obs.get_tracer()
+        with tr.span(obs.FWD_BASE) as sp:
+            l0 = sp.fence(loss_fn(params, batch))
         seeds_arr = jnp.stack([jnp.asarray(s, jnp.uint32) for s in seeds])
         stacked_masks = ({g: jnp.stack([m[g] for m in masks])
                           for g in masks[0]} if masks[0] else {})
@@ -68,11 +71,18 @@ class OneSidedBatched(Estimator):
             return loss_fn(p, batch)
 
         chunk = cfg.q_chunk if 0 < cfg.q_chunk < q else q
-        parts = []
-        for c0 in range(0, q, chunk):
-            sub_masks = {g: m[c0:c0 + chunk] for g, m in stacked_masks.items()}
-            parts.append(jax.vmap(probe)(seeds_arr[c0:c0 + chunk], sub_masks))
-        losses = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        # One span over all q probes: the vmapped region itself traces,
+        # so per-probe spans inside it would (correctly) no-op.
+        with tr.span(obs.FWD_PLUS) as sp:
+            parts = []
+            for c0 in range(0, q, chunk):
+                sub_masks = {g: m[c0:c0 + chunk]
+                             for g, m in stacked_masks.items()}
+                parts.append(jax.vmap(probe)(seeds_arr[c0:c0 + chunk],
+                                             sub_masks))
+            losses = sp.fence(parts[0] if len(parts) == 1
+                              else jnp.concatenate(parts))
+        tr.count(obs.CTR_PROBES, q)
         g = (losses - l0) / cfg.eps                     # (q,) projections
         coeffs = tuple(g[i] / q for i in range(q))
         dirs = DirectionSet(seeds=seeds, coeffs=coeffs, restore=(0.0,) * q,

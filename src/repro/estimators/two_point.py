@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.estimators.base import DirectionSet, Estimator
+from repro.obs import trace as obs
 
 
 class TwoPointSPSA(Estimator):
@@ -20,21 +21,29 @@ class TwoPointSPSA(Estimator):
 
     def estimate(self, loss_fn, params, batch, seed, state):
         cfg = self.cfg
+        tr = obs.get_tracer()
         masks, idxs, n_active = self.select(seed, state)
         if self.virtual:
             # fused forward: same z, same floats, zero parameter writes —
             # the step collapses to 2 forwards + the single update axpy
-            l_plus = self._vloss(loss_fn, params, batch, seed, cfg.eps,
-                                 masks)
-            l_minus = self._vloss(loss_fn, params, batch, seed, -cfg.eps,
-                                  masks)
+            with tr.span(obs.FWD_PLUS) as sp:
+                l_plus = sp.fence(self._vloss(loss_fn, params, batch, seed,
+                                              cfg.eps, masks))
+            with tr.span(obs.FWD_MINUS) as sp:
+                l_minus = sp.fence(self._vloss(loss_fn, params, batch, seed,
+                                               -cfg.eps, masks))
             p, restore = params, 0.0
         else:
-            p = self._ax(params, cfg.eps, seed, masks, idxs)
-            l_plus = loss_fn(p, batch)
-            p = self._ax(p, -2.0 * cfg.eps, seed, masks, idxs)
-            l_minus = loss_fn(p, batch)
+            with tr.span(obs.PERTURB) as sp:
+                p = sp.fence(self._ax(params, cfg.eps, seed, masks, idxs))
+            with tr.span(obs.FWD_PLUS) as sp:
+                l_plus = sp.fence(loss_fn(p, batch))
+            with tr.span(obs.PERTURB) as sp:
+                p = sp.fence(self._ax(p, -2.0 * cfg.eps, seed, masks, idxs))
+            with tr.span(obs.FWD_MINUS) as sp:
+                l_minus = sp.fence(loss_fn(p, batch))
             restore = cfg.eps
+        tr.count(obs.CTR_PROBES, 2)
         g = (l_plus - l_minus) / (2.0 * cfg.eps)
         dirs = DirectionSet(seeds=(jnp.asarray(seed, jnp.uint32),),
                             coeffs=(g,), restore=(restore,),

@@ -52,6 +52,9 @@ ALIASES = {
     "--seed": "run.seed",
     "--ckpt-dir": "run.ckpt_dir",
     "--ckpt-every": "run.ckpt_every",
+    "--telemetry": "telemetry.enabled",
+    "--trace-jsonl": "telemetry.jsonl",
+    "--profile-dir": "telemetry.profile_dir",
 }
 
 _SPEC_DEST = "spec_overrides"
@@ -285,15 +288,21 @@ def _cmd_serve(ns):
     tokens = rng.integers(0, cfg.vocab, (ns.batch, ns.prompt_len))
 
     if engine_mode == "paged":
+        from repro import obs
         from repro import serving as serving_mod
-        engine = serving_mod.Engine(cfg, params, spec.serving)
+        sess = obs.session(spec.telemetry)
+        engine = serving_mod.Engine(cfg, params, spec.serving, obs=sess)
         reqs = [serving_mod.Request(rid=i, tokens=row.tolist(),
                                     max_new_tokens=ns.gen,
                                     seed=spec.run.seed + i)
                 for i, row in enumerate(tokens)]
         t0 = time.perf_counter()
-        results = engine.run(reqs)
+        with sess.profile():
+            results = engine.run(reqs)
         dt = time.perf_counter() - t0
+        sess.close()
+        if sess.enabled and not spec.telemetry.prometheus:
+            print(engine.metrics_text())
         out = [r.tokens for r in sorted(results, key=lambda r: r.rid)]
         print(f"arch={cfg.name} engine=paged lanes="
               f"{spec.serving.max_lanes} batch={ns.batch} "

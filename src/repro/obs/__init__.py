@@ -1,0 +1,46 @@
+"""``repro.obs`` — stage-level tracing + serving metrics (DESIGN.md §13).
+
+One lightweight telemetry subsystem used by every hot path:
+
+  * :mod:`~repro.obs.trace` — ``Span``/``Tracer`` with monotonic
+    ``perf_counter`` timing, explicit ``block_until_ready`` fencing,
+    nesting, a zero-allocation disabled path, and the named ZO step
+    stages (``perturb`` / ``forward+εz`` / ``forward-εz`` /
+    ``update_axpy``) plus counters for probes, axpy sweeps, RNG folds
+    and active layers under LeZO sparsity.
+  * :mod:`~repro.obs.sinks` — in-memory ring buffer + JSONL event log.
+  * :mod:`~repro.obs.metrics` — Prometheus-style counters / gauges /
+    histograms with a text exposition dump (the serving engine's queue
+    depth, lane occupancy, page utilization, TTFT/latency, tokens/sec).
+  * :mod:`~repro.obs.profiler` — optional ``jax.profiler`` region
+    behind ``telemetry.profile_dir``.
+  * :mod:`~repro.obs.runtime` — ``session(spec.telemetry)`` wiring.
+
+Emitters call ``obs.get_tracer()`` unconditionally; the default is the
+disabled :data:`NULL` tracer, whose operations are free, and spans are
+automatically suppressed while jax traces a jit — so instrumentation
+costs nothing on compiled steady-state paths and yields real stage
+timings when the same code runs eagerly (``benchmarks/step_time.py``).
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, LATENCY_BUCKETS,
+                               Registry)
+from repro.obs.profiler import profile
+from repro.obs.runtime import NULL_SESSION, Session, session
+from repro.obs.sinks import (JSONLSink, RingSink, read_jsonl,
+                             spans_from_jsonl)
+from repro.obs.trace import (CTR_AXPY, CTR_PROBES, CTR_RNG_FOLDS,
+                             CTR_SELECTS, FWD_BASE, FWD_MINUS, FWD_PLUS,
+                             GAUGE_ACTIVE, NULL, PERTURB, SERVE_DECODE,
+                             SERVE_PREFILL, STAGES, Span, SpanRecord,
+                             TRAIN_STEP, Tracer, UPDATE, get_tracer,
+                             set_tracer, tracing, use)
+
+__all__ = [
+    "CTR_AXPY", "CTR_PROBES", "CTR_RNG_FOLDS", "CTR_SELECTS", "Counter",
+    "FWD_BASE", "FWD_MINUS", "FWD_PLUS", "GAUGE_ACTIVE", "Gauge",
+    "Histogram", "JSONLSink", "LATENCY_BUCKETS", "NULL", "NULL_SESSION",
+    "PERTURB", "Registry", "RingSink", "SERVE_DECODE", "SERVE_PREFILL",
+    "STAGES", "Session", "Span", "SpanRecord", "TRAIN_STEP", "Tracer",
+    "UPDATE", "get_tracer", "profile", "read_jsonl", "session",
+    "set_tracer", "spans_from_jsonl", "tracing", "use",
+]

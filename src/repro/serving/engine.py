@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.models import lm
 from repro.serving import sampling
 from repro.serving.pool import KVPool
@@ -65,7 +66,8 @@ class Engine:
     """Drive ``spec.serving`` over a model: submit() requests, step()
     until drained (or just run())."""
 
-    def __init__(self, cfg, params, serving, mesh=None, clock=None):
+    def __init__(self, cfg, params, serving, mesh=None, clock=None,
+                 obs=None):
         if not lm.supports_paged(cfg):
             kinds = sorted({b.kind for s in cfg.stages for b in s.pattern})
             raise EngineUnsupported(
@@ -134,6 +136,39 @@ class Engine:
         self._t_submit: Dict[int, float] = {}
         self._decode_dirty = True        # device lane state needs rebuild
         self._d_toks = self._d_table = self._d_pos = self._d_seeds = None
+        # telemetry (DESIGN.md §13): an obs.Session, or the free
+        # NULL_SESSION — the engine never branches on "is obs on"
+        self.obs = obs if obs is not None else obs_mod.NULL_SESSION
+        reg = self.obs.registry
+        self._m_queue = reg.gauge("serving_queue_depth",
+                                  "requests waiting for admission")
+        self._m_lanes = reg.gauge("serving_lanes_active",
+                                  "lanes prefilling or decoding")
+        self._m_pages = reg.gauge("serving_pages_in_use",
+                                  "KV pool pages allocated")
+        self._m_util = reg.gauge("serving_page_utilization",
+                                 "pages in use / usable pages")
+        self._m_ttft = reg.histogram("serving_ttft_seconds",
+                                     "submit -> first generated token")
+        self._m_lat = reg.histogram("serving_latency_seconds",
+                                    "submit -> request finished")
+        self._m_toks = reg.counter("serving_tokens_generated",
+                                   "generated tokens over all requests")
+        self._m_reqs = reg.counter("serving_requests_completed",
+                                   "requests retired")
+
+    def _sample_gauges(self):
+        self._m_queue.set(len(self.sched.queue))
+        self._m_lanes.set(len(self.sched.prefilling())
+                          + len(self.sched.decoding()))
+        in_use = self.pool.in_use
+        self._m_pages.set(in_use)
+        usable = self.pool.n_pages - 1        # page 0 is the trash page
+        self._m_util.set(in_use / usable if usable else 0.0)
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the engine's metrics."""
+        return self.obs.registry.to_text()
 
     # ----------------------------------------------------------- compiles
     def n_compiles(self) -> int:
@@ -176,14 +211,16 @@ class Engine:
                     lane.req.tokens[start:lo], np.int32)
             final = start + c >= lane.padded_len
             sel = (min(lane.prompt_len - 1 - start, c - 1) if final else 0)
-            toks, self.arena = self._pstep(
-                self.params, self.arena, jnp.asarray(chunk),
-                jnp.asarray(np.asarray(sched.page_row(lane),
-                                       np.int32)[None]),
-                jnp.asarray([start], jnp.int32),
-                jnp.asarray([sel], jnp.int32),
-                jnp.asarray([lane.req.seed], jnp.uint32),
-                jnp.asarray([lane.prompt_len], jnp.int32))
+            with self.obs.tracer.span(obs_mod.SERVE_PREFILL) as sp:
+                toks, self.arena = self._pstep(
+                    self.params, self.arena, jnp.asarray(chunk),
+                    jnp.asarray(np.asarray(sched.page_row(lane),
+                                           np.int32)[None]),
+                    jnp.asarray([start], jnp.int32),
+                    jnp.asarray([sel], jnp.int32),
+                    jnp.asarray([lane.req.seed], jnp.uint32),
+                    jnp.asarray([lane.prompt_len], jnp.int32))
+                sp.fence(toks)
             self.n_prefill_calls += 1
             lane.next_chunk += 1
             lane.pos = min(start + c, lane.padded_len)
@@ -220,9 +257,11 @@ class Engine:
                 self._d_pos = jnp.asarray(pos)
                 self._d_seeds = jnp.asarray(seeds)
                 self._decode_dirty = False
-            self._d_toks, self._d_pos, self.arena = self._dstep(
-                self.params, self.arena, self._d_toks, self._d_table,
-                self._d_pos, self._d_seeds)
+            with self.obs.tracer.span(obs_mod.SERVE_DECODE) as sp:
+                self._d_toks, self._d_pos, self.arena = self._dstep(
+                    self.params, self.arena, self._d_toks, self._d_table,
+                    self._d_pos, self._d_seeds)
+                sp.fence(self._d_toks)
             self.n_decode_steps += 1
             nxt = np.asarray(self._d_toks)[:, 0]
             for i in live:
@@ -233,6 +272,7 @@ class Engine:
                 lane.pos += 1
                 if self._done(lane):
                     finished.append(self._retire(i))
+        self._sample_gauges()
         return finished
 
     def _done(self, lane: Lane) -> bool:
@@ -243,11 +283,17 @@ class Engine:
     def _retire(self, i: int) -> GenResult:
         self._decode_dirty = True        # lane composition changed
         lane = self.sched.finish(i)      # pages return to the pool now
-        return GenResult(rid=lane.req.rid, tokens=list(lane.out),
-                         prompt_len=lane.prompt_len,
-                         t_submit=self._t_submit.pop(lane.req.rid, 0.0),
-                         t_admit=lane.t_admit, t_first=lane.t_first,
-                         t_done=self.clock())
+        res = GenResult(rid=lane.req.rid, tokens=list(lane.out),
+                        prompt_len=lane.prompt_len,
+                        t_submit=self._t_submit.pop(lane.req.rid, 0.0),
+                        t_admit=lane.t_admit, t_first=lane.t_first,
+                        t_done=self.clock())
+        self._m_reqs.inc()
+        self._m_toks.inc(len(res.tokens))
+        if res.t_submit:
+            self._m_ttft.observe(res.ttft)
+            self._m_lat.observe(res.latency)
+        return res
 
     # ---------------------------------------------------------------- run
     def run(self, requests: Sequence[Request]) -> List[GenResult]:
@@ -259,6 +305,7 @@ class Engine:
             self.submit(r)
         results: List[GenResult] = []
         guard = 0
+        t_run = self.clock()
         while self.sched.busy:
             before = (self.n_prefill_calls, self.n_decode_steps,
                       len(results), len(self.sched.queue))
@@ -270,4 +317,10 @@ class Engine:
                 raise RuntimeError(
                     "engine stalled: queue head needs "
                     "more pool pages than will ever free up")
+        dt = self.clock() - t_run
+        if dt > 0:
+            self.obs.registry.gauge(
+                "serving_tokens_per_second",
+                "generated tokens / drain wall time, last run()").set(
+                sum(len(r.tokens) for r in results) / dt)
         return results

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import estimators
+from repro import obs as obs_mod
 from repro import tasks as tasks_mod
 from repro.core import fo, rng, zo, zo_adaptive
 from repro.data import synthetic
@@ -98,6 +99,9 @@ class Trainer:
                 DeprecationWarning, stacklevel=2)
         self.experiment = _spec
         self.derived = _derived
+        # telemetry: NULL_SESSION unless the spec's telemetry node asked
+        # for it — drivers hold a Session unconditionally (DESIGN.md §13)
+        self.obs = obs_mod.session(getattr(_spec, "telemetry", None))
         self.mcfg, self.task, self.tcfg = model_cfg, task, tcfg
         if tcfg.forward_backend != "materialized":
             zo_cfg = dataclasses.replace(zo_cfg,
@@ -254,12 +258,14 @@ class Trainer:
             # ~1/(1-decay) steps (DESIGN.md §7)
 
         history = {"step": [], "loss": [], "val_loss": [], "val_step": [],
-                   "val_acc": [], "wall": []}
+                   "val_acc": [], "wall": [], "wall_compute": []}
         if self.registry_task is not None:
             history["metric_name"] = self.registry_task.metric
         # best-checkpoint score, maximized: task metric for registry tasks
         # (SuperGLUE protocol), -val_loss otherwise (the paper's protocol)
         best = (-np.inf, None, -1)
+        tr = self.obs.tracer
+        overhead = 0.0   # eval + checkpoint seconds, excluded from wall_compute
         t0 = time.perf_counter()
         # eval-only arrays (e.g. multiple-choice candidates) would be
         # fancy-indexed every step just to be dropped by _model_batch
@@ -267,40 +273,59 @@ class Trainer:
                        if k in tasks_mod.MODEL_BATCH_KEYS}
         stream = synthetic.batches(stream_data, tcfg.batch_size, tcfg.steps,
                                    seed=tcfg.seed + 7)
-        for t, np_batch in enumerate(stream):
-            if t < start:
-                continue
-            batch = self._model_batch(np_batch)
-            if self.tcfg.mode == "zo":
-                params, self.est_state, metrics = self._step(
-                    params, self.est_state, batch, jnp.int32(t), base_seed)
-            elif self.tcfg.mode == "zo_momentum":
-                params, self.mom_state, metrics = self._mom_step(
-                    params, self.mom_state, batch, jnp.int32(t), base_seed)
-            else:
-                params, self.fo_state, metrics = self._step(
-                    params, self.fo_state, batch, jnp.int32(t))
-            if tcfg.log_every and t % tcfg.log_every == 0:
-                history["step"].append(t)
-                history["loss"].append(float(metrics["loss"]))
-                history["wall"].append(time.perf_counter() - t0)
-            if tcfg.eval_every and (t + 1) % tcfg.eval_every == 0:
-                vl, va = self.evaluate(params, val_data)
-                history["val_step"].append(t + 1)
-                history["val_loss"].append(vl)
-                history["val_acc"].append(va)
-                score = va if self.registry_task is not None else -vl
-                if score > best[0]:
-                    best = (score, jax.tree.map(np.asarray, params), t + 1)
-            if self.ckpt and tcfg.ckpt_every and (t + 1) % tcfg.ckpt_every == 0:
-                self.ckpt.save(t + 1, params, int(base_seed),
-                               extra=self._ckpt_extra(), blocking=False)
+        with self.obs.profile():
+            for t, np_batch in enumerate(stream):
+                if t < start:
+                    continue
+                batch = self._model_batch(np_batch)
+                with tr.span(obs_mod.TRAIN_STEP) as sp:
+                    if self.tcfg.mode == "zo":
+                        params, self.est_state, metrics = self._step(
+                            params, self.est_state, batch, jnp.int32(t),
+                            base_seed)
+                    elif self.tcfg.mode == "zo_momentum":
+                        params, self.mom_state, metrics = self._mom_step(
+                            params, self.mom_state, batch, jnp.int32(t),
+                            base_seed)
+                    else:
+                        params, self.fo_state, metrics = self._step(
+                            params, self.fo_state, batch, jnp.int32(t))
+                    sp.fence(metrics["loss"])
+                if tr.enabled and "active_layers" in metrics:
+                    tr.gauge(obs_mod.GAUGE_ACTIVE,
+                             int(metrics["active_layers"]))
+                # the final step always logs, even off the log_every grid —
+                # a truncated tail made short runs look like they never ran
+                if tcfg.log_every and (t % tcfg.log_every == 0
+                                       or t == tcfg.steps - 1):
+                    now = time.perf_counter()
+                    history["step"].append(t)
+                    history["loss"].append(float(metrics["loss"]))
+                    history["wall"].append(now - t0)
+                    history["wall_compute"].append(now - t0 - overhead)
+                if tcfg.eval_every and (t + 1) % tcfg.eval_every == 0:
+                    te = time.perf_counter()
+                    vl, va = self.evaluate(params, val_data)
+                    history["val_step"].append(t + 1)
+                    history["val_loss"].append(vl)
+                    history["val_acc"].append(va)
+                    score = va if self.registry_task is not None else -vl
+                    if score > best[0]:
+                        best = (score, jax.tree.map(np.asarray, params), t + 1)
+                    overhead += time.perf_counter() - te
+                if (self.ckpt and tcfg.ckpt_every
+                        and (t + 1) % tcfg.ckpt_every == 0):
+                    te = time.perf_counter()
+                    self.ckpt.save(t + 1, params, int(base_seed),
+                                   extra=self._ckpt_extra(), blocking=False)
+                    overhead += time.perf_counter() - te
         if self.ckpt:
             self.ckpt.wait()
         history["final_params"] = params
         if best[1] is not None:
             history["best_params"] = best[1]
             history["best_step"] = best[2]
+        self.obs.flush()
         return history
 
     def evaluate(self, params, val_data, max_examples=256):

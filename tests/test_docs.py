@@ -2,11 +2,11 @@
 
 Two families:
 
-  * generated-doc freshness — docs/cli.md and the serving spec table in
-    docs/serving.md must match what the live schema generates (`make
-    docs`), the same pattern as the golden spec JSON: change the schema
-    without regenerating and this fails before CI's docs-freshness job
-    does.
+  * generated-doc freshness — docs/cli.md plus the spec tables injected
+    into docs/serving.md and docs/observability.md must match what the
+    live schema generates (`make docs`), the same pattern as the golden
+    spec JSON: change the schema without regenerating and this fails
+    before CI's docs-freshness job does.
   * module-docstring audit — every module under src/repro/ carries a
     docstring citing its DESIGN.md section, and every §N cited anywhere
     in a module docstring exists in DESIGN.md (no dangling citations).
@@ -39,6 +39,15 @@ def test_serving_md_spec_table_fresh():
     text = _read(DOCS, "serving.md")
     assert docgen.inject(text, docgen.serving_spec_markdown()) == text, (
         "docs/serving.md generated span is stale — run `make docs`")
+
+
+def test_observability_md_spec_table_fresh():
+    from repro.launch import docgen
+    text = _read(DOCS, "observability.md")
+    assert docgen.inject(text, docgen.telemetry_spec_markdown(),
+                         docgen.TEL_MARK_BEGIN,
+                         docgen.TEL_MARK_END) == text, (
+        "docs/observability.md generated span is stale — run `make docs`")
 
 
 def test_docgen_idempotent_and_deterministic():
@@ -110,6 +119,6 @@ def test_no_dangling_design_citations():
 
 def test_docs_cite_only_existing_design_sections():
     valid = _design_sections()
-    for doc in ("serving.md", "cli.md"):
+    for doc in ("serving.md", "cli.md", "observability.md"):
         for sec in re.findall(r"§(\d+)", _read(DOCS, doc)):
             assert sec in valid, f"docs/{doc} cites nonexistent §{sec}"
