@@ -28,7 +28,7 @@ test-fast:
 
 bench-smoke:
 	$(PY) benchmarks/estimator_sweep.py --smoke --preset bench-smoke
-	$(PY) benchmarks/fused_forward.py --smoke --preset bench-smoke --json BENCH_fused.json
+	$(PY) benchmarks/fused_forward.py --smoke --preset bench-smoke --json BENCH_fused.json --check
 	$(PY) benchmarks/serving.py --smoke --preset bench-smoke --json BENCH_serving.json --check
 	$(PY) benchmarks/step_time.py --smoke --preset bench-smoke --json BENCH_step.json --jsonl BENCH_step_trace.jsonl --check
 	$(PY) benchmarks/run.py --collect-only --check

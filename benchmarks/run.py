@@ -23,8 +23,9 @@ import json
 import sys
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
-sys.path.insert(0, str(Path(__file__).parent.parent))
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+sys.path.insert(0, str(REPO_ROOT))
 
 
 def collect_artifacts(root: Path, exclude: Path = None) -> dict:
@@ -88,12 +89,23 @@ def main() -> None:
             rows = mod.run()
             results[mod.__name__.split(".")[-1]] = common.rows_to_json(rows)
 
-    artifacts = collect_artifacts(
-        Path.cwd(), exclude=Path(args.json) if args.json else None)
+    # Artifacts are collected from the REPO ROOT, not the cwd: bench
+    # scripts write BENCH_*.json beside the Makefile, and anchoring on
+    # Path.cwd() made `run.py --json` invoked from anywhere else emit an
+    # empty `[]` trajectory while exiting zero.  The cwd is still
+    # scanned as a fallback for locally-run scripts.
+    exclude = Path(args.json) if args.json else None
+    artifacts = collect_artifacts(REPO_ROOT, exclude=exclude)
+    if Path.cwd().resolve() != REPO_ROOT:
+        for name, payload in collect_artifacts(Path.cwd(),
+                                               exclude=exclude).items():
+            artifacts.setdefault(name, payload)
+    trajectory = sorted(artifacts)
     if args.json:
         from benchmarks import common
         common.write_json(args.json, {
-            "bench": "all", "modules": results, "artifacts": artifacts})
+            "bench": "all", "modules": results, "artifacts": artifacts,
+            "trajectory": trajectory})
     if args.check:
         bad = tripwire_failures(artifacts)
         for aname, tname, rec in bad:
@@ -103,7 +115,12 @@ def main() -> None:
                   file=sys.stderr)
         if bad:
             raise SystemExit(f"bench tripwires failed: {len(bad)}")
-        print(f"tripwires ok across {len(artifacts)} artifact(s)")
+        if not artifacts:
+            raise SystemExit(
+                "bench check: no BENCH_*.json artifacts found under "
+                f"{REPO_ROOT} — an empty trajectory gates nothing")
+        print(f"tripwires ok across {len(artifacts)} artifact(s): "
+              + ", ".join(trajectory))
 
 
 if __name__ == "__main__":

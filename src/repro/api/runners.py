@@ -69,7 +69,8 @@ def derive(spec: Experiment) -> Derived:
         eps=o.eps, lr=o.lr, n_drop=n_drop, policy=o.policy,
         backend=rt.backend, fused_update=o.fused_update,
         weight_decay=o.weight_decay, interpret=rt.interpret,
-        forward_backend=rt.forward_backend)
+        forward_backend=rt.forward_backend,
+        paired_probes=rt.paired_probes)
     est_cfg = estimators.from_zo(zo_cfg, name=e.name, q=e.q,
                                  q_chunk=e.q_chunk, inner=e.inner,
                                  importance_decay=e.importance_decay)

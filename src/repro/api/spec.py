@@ -91,7 +91,10 @@ class Estimator:
 class Runtime:
     backend: str = "scan"         # axpy kernel: dense | scan | gather | pallas
     forward_backend: str = "materialized"   # | virtual | virtual_ref
-    interpret: bool = True        # pallas interpret mode (CPU container)
+    # stack the virtual ±εz pair (and one_sided's q-chunks) onto one
+    # paired fused forward — bit-identical floats, half the W-tile loads
+    paired_probes: bool = True
+    interpret: bool = True        # axpy pallas interpret mode (CPU container)
     mesh: str = "single"          # single | multi_pod (dryrun/sharded lowering)
     n_loss_shards: int = 1
     quorum: float = 1.0

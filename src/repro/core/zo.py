@@ -220,6 +220,10 @@ class ZOConfig:
     # 2 forwards + 1 update axpy with zero perturb/restore writes
     # (repro.fused, DESIGN.md §10)
     forward_backend: str = "materialized"
+    # stack the virtual ±εz pair onto ONE paired forward (each W tile
+    # loaded and each z tile regenerated once per pair) — bit-identical
+    # to the per-probe virtual path; ignored when materialized
+    paired_probes: bool = True
 
 
 def make_zo_step(loss_fn: Callable, spec: ZOSpec, cfg: ZOConfig,

@@ -67,6 +67,7 @@ def from_zo(zo_cfg, name: str = "two_point", q: int = 1,
         fused_update=zo_cfg.fused_update, weight_decay=zo_cfg.weight_decay,
         interpret=zo_cfg.interpret,
         forward_backend=getattr(zo_cfg, "forward_backend", "materialized"),
+        paired_probes=getattr(zo_cfg, "paired_probes", True),
         **kw)
 
 

@@ -34,7 +34,12 @@ class AveragedSPSA(Estimator):
         for s in seeds:
             m, ix, na = self.select(s, state)
             n_active = na if n_active is None else n_active
-            if self.virtual:
+            if self.virtual and cfg.paired_probes:
+                # the ±εz pair rides one paired fused forward — W tiles
+                # and z tiles each touched once per pair (DESIGN.md §10)
+                ls = self._vloss_pair(loss_fn, p, batch, s, cfg.eps, m)
+                l_plus, l_minus = ls[0], ls[1]
+            elif self.virtual:
                 # probe pair through the fused forward: no perturb, no
                 # restore-before-next-probe — params never move here
                 l_plus = self._vloss(loss_fn, p, batch, s, cfg.eps, m)

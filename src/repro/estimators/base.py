@@ -52,7 +52,8 @@ class EstimatorConfig:
     backend: str = "dense"        # dense | scan | gather | pallas
     fused_update: bool = True
     weight_decay: float = 0.0
-    interpret: bool = True        # pallas interpret mode (CPU container)
+    interpret: bool = True        # pallas interpret mode for the *axpy*
+                                  # kernels (fused forwards auto-detect)
     inner: str = "two_point"      # estimator the importance wrapper drives
     importance_decay: float = 0.99  # EMA for the per-layer |g| scores
     # materialized | virtual | virtual_ref — virtual probes evaluate
@@ -60,6 +61,11 @@ class EstimatorConfig:
     # loss_fn must accept a ``perturb`` kwarg (models.lm.lm_loss does)
     # and the step performs zero perturb/restore parameter writes
     forward_backend: str = "materialized"
+    # stack virtual probes onto ONE fused forward: two_point's ±εz pair
+    # shares each W tile load *and* each z regeneration (shared seed);
+    # one_sided's q-chunks share the W loads.  Bit-identical to the
+    # per-probe virtual path (DESIGN.md §10); no effect when materialized
+    paired_probes: bool = True
 
 
 @dataclasses.dataclass
@@ -146,10 +152,32 @@ class Estimator:
 
     def _vloss(self, loss_fn, params, batch, seed, scale, masks):
         """Probe loss(theta + scale*z(seed)) with zero parameter writes:
-        the fused forward regenerates z in its kernels (repro.fused)."""
+        the fused forward regenerates z in its kernels (repro.fused).
+        ``interpret=None`` lets the kernel auto-detect the platform
+        (cfg.interpret governs only the axpy sweeps)."""
         from repro import fused  # local: fused must stay import-light here
         ctx = fused.make_ctx(seed, scale, masks, self.cfg.forward_backend,
-                             interpret=self.cfg.interpret)
+                             interpret=None)
+        return loss_fn(params, batch, perturb=ctx)
+
+    def _vloss_pair(self, loss_fn, params, batch, seed, eps, masks):
+        """The antithetic ±εz pair as ONE fused forward: returns the (2,)
+        loss vector [l_plus, l_minus].  Same floats as two ``_vloss``
+        calls at ±eps, but every W tile is loaded and every z tile
+        regenerated once for the pair (fused.make_pair_ctx)."""
+        from repro import fused
+        ctx = fused.make_pair_ctx(seed, eps, masks,
+                                  self.cfg.forward_backend, interpret=None)
+        return loss_fn(params, batch, perturb=ctx)
+
+    def _vloss_stack(self, loss_fn, params, batch, seeds, scales, masks):
+        """P independent probes stacked onto one fused forward (one_sided's
+        q-chunks): ``seeds`` (P,), ``scales`` scalar-or-(P,), ``masks``
+        {g: (P, L_g)}.  Returns the (P,) loss vector — same floats as the
+        vmapped per-probe path, one pass over W."""
+        from repro import fused
+        ctx = fused.make_stack_ctx(seeds, scales, masks,
+                                   self.cfg.forward_backend, interpret=None)
         return loss_fn(params, batch, perturb=ctx)
 
     # --------------------------------------------------------- protocol

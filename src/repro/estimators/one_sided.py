@@ -78,8 +78,16 @@ class OneSidedBatched(Estimator):
             for c0 in range(0, q, chunk):
                 sub_masks = {g: m[c0:c0 + chunk]
                              for g, m in stacked_masks.items()}
-                parts.append(jax.vmap(probe)(seeds_arr[c0:c0 + chunk],
-                                             sub_masks))
+                if self.virtual and cfg.paired_probes:
+                    # stacked kernel pass: the chunk's probes share one
+                    # sweep over W (per-probe z streams stay intact) —
+                    # same floats as the vmapped path, fewer tile loads
+                    parts.append(self._vloss_stack(
+                        loss_fn, params, batch, seeds_arr[c0:c0 + chunk],
+                        cfg.eps, sub_masks))
+                else:
+                    parts.append(jax.vmap(probe)(seeds_arr[c0:c0 + chunk],
+                                                 sub_masks))
             losses = sp.fence(parts[0] if len(parts) == 1
                               else jnp.concatenate(parts))
         tr.count(obs.CTR_PROBES, q)

@@ -23,7 +23,16 @@ class TwoPointSPSA(Estimator):
         cfg = self.cfg
         tr = obs.get_tracer()
         masks, idxs, n_active = self.select(seed, state)
-        if self.virtual:
+        if self.virtual and cfg.paired_probes:
+            # ONE paired forward for the ±εz pair: each W tile loads and
+            # each z tile regenerates once for both signs — the step is
+            # 1 paired forward + the single update axpy (DESIGN.md §10)
+            with tr.span(obs.FWD_PAIR) as sp:
+                losses = sp.fence(self._vloss_pair(loss_fn, params, batch,
+                                                   seed, cfg.eps, masks))
+            l_plus, l_minus = losses[0], losses[1]
+            p, restore = params, 0.0
+        elif self.virtual:
             # fused forward: same z, same floats, zero parameter writes —
             # the step collapses to 2 forwards + the single update axpy
             with tr.span(obs.FWD_PLUS) as sp:

@@ -33,23 +33,63 @@ import jax.numpy as jnp
 
 from repro.estimators.costs import FORWARD_BACKENDS
 from repro.fused import ref
-from repro.fused.matmul import pmatmul
+from repro.fused.matmul import default_interpret, pmatmul, pmatmul_stack
 from repro.fused.sharded import pmatmul_col_sharded, pmatmul_row_sharded
-from repro.fused.view import IMPLS, LayerPerturb, PerturbCtx
+from repro.fused.view import IMPLS, LayerPerturb, PerturbCtx, ProbePair
 
 __all__ = ["FORWARD_BACKENDS", "IMPLS", "LayerPerturb", "PerturbCtx",
-           "make_ctx", "pmatmul", "pmatmul_col_sharded",
-           "pmatmul_row_sharded", "ref"]
+           "ProbePair", "default_interpret", "make_ctx", "make_pair_ctx",
+           "make_stack_ctx", "pmatmul", "pmatmul_col_sharded",
+           "pmatmul_row_sharded", "pmatmul_stack", "ref"]
 
 
-def make_ctx(seed, scale, masks, forward_backend: str,
-             interpret: bool = True) -> PerturbCtx:
-    """Build the perturbation lens for one probe of ``forward_backend``."""
+def _impl_of(forward_backend: str) -> str:
     if forward_backend not in FORWARD_BACKENDS[1:]:
         raise ValueError(
             f"not a virtual forward backend: {forward_backend!r}; "
             f"pick from {FORWARD_BACKENDS[1:]}")
-    impl = "ref" if forward_backend == "virtual_ref" else "pallas"
+    return "ref" if forward_backend == "virtual_ref" else "pallas"
+
+
+def make_ctx(seed, scale, masks, forward_backend: str,
+             interpret=None) -> PerturbCtx:
+    """Build the perturbation lens for one probe of ``forward_backend``.
+    ``interpret=None`` auto-detects the platform (compiled on TPU)."""
     return PerturbCtx(seed=jnp.asarray(seed, jnp.uint32),
                       scale=jnp.asarray(scale, jnp.float32),
-                      masks=masks, impl=impl, interpret=interpret)
+                      masks=masks, impl=_impl_of(forward_backend),
+                      interpret=interpret)
+
+
+def make_pair_ctx(seed, eps, masks, forward_backend: str,
+                  interpret=None) -> PerturbCtx:
+    """The antithetic ±εz pair as ONE stacked ctx: probe 0 is +eps,
+    probe 1 is -eps, both drawing the identical z stream (shared seed) —
+    the fused forward loads every W tile and regenerates every z tile
+    once for the pair.  ``lm_loss`` under this ctx returns a (2,) loss
+    vector ``[l_plus, l_minus]``."""
+    s = jnp.asarray(seed, jnp.uint32)
+    e = jnp.asarray(eps, jnp.float32)
+    sm = (None if masks is None else
+          {g: jnp.broadcast_to(m, (2,) + m.shape) for g, m in masks.items()})
+    return PerturbCtx(seed=jnp.stack([s, s]),
+                      scale=jnp.stack([e, -e]),
+                      masks=sm, impl=_impl_of(forward_backend),
+                      interpret=interpret,
+                      pair=ProbePair(n=2, shared_seed=True))
+
+
+def make_stack_ctx(seeds, scales, masks, forward_backend: str,
+                   interpret=None) -> PerturbCtx:
+    """P independent probes stacked on one forward (one_sided's q
+    probes): ``seeds``/``scales`` are (P,) vectors, ``masks`` maps group
+    -> (P, L_g).  W tiles are loaded once for all P probes; z streams
+    stay per-seed.  ``lm_loss`` returns a (P,) loss vector."""
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    P = seeds.shape[0]
+    return PerturbCtx(seed=seeds,
+                      scale=jnp.broadcast_to(
+                          jnp.asarray(scales, jnp.float32), (P,)),
+                      masks=masks, impl=_impl_of(forward_backend),
+                      interpret=interpret,
+                      pair=ProbePair(n=P, shared_seed=False))

@@ -96,6 +96,45 @@ def pmatmul(x, w, seed, scale, active=None, *, trans=False, ld=None,
     return x @ weff
 
 
+def _stack_scales(scales, active):
+    """(P,) effective scales with per-probe LeZO predicates folded in
+    (``0 * z`` is exact — see :func:`_eff_scale`)."""
+    s = jnp.asarray(scales, F32)
+    if active is None:
+        return s
+    return jnp.where(jnp.asarray(active, jnp.bool_), s, jnp.zeros((), F32))
+
+
+def pmatmul_stack(x, w, seeds, scales, active=None, *, trans=False, ld=None,
+                  row0=0, col0=0):
+    """P stacked probes ``x[p] @ (w + scales[p]*z(seeds[p]))`` — the
+    oracle for ``fused.matmul.pmatmul_stack``.  x: (P, ..., K); seeds/
+    scales/active: (P,).  The per-probe floats are exactly what P
+    separate :func:`pmatmul` calls produce (a batched dot over the probe
+    axis evaluates each slice with the same contraction)."""
+    P = x.shape[0]
+    z = zmat(jnp.asarray(seeds, jnp.uint32).reshape(P, 1, 1),
+             w.shape[0], w.shape[1], row0=row0, col0=col0, ld=ld,
+             trans=trans)                                    # (P, K, N)
+    eff = _stack_scales(scales, active).reshape(P, 1, 1)
+    weff = (w[None].astype(F32) + eff * z).astype(w.dtype)
+    lead = x.shape[1:-1]
+    x2 = x.reshape(P, -1, x.shape[-1])
+    out = jnp.einsum("pmk,pkn->pmn", x2, weff)
+    return out.reshape(P, *lead, w.shape[1])
+
+
+def pvec_stack(w, seeds, scales, active=None):
+    """P stacked perturbed views of a vector-sized leaf: (P, *w.shape)."""
+    P = jnp.asarray(seeds).shape[0]
+    idx = kref._within_layer_index((1,) + w.shape)[0]
+    z = rng.counter_normal(
+        jnp.asarray(seeds, jnp.uint32).reshape((P,) + (1,) * w.ndim),
+        idx[None])
+    eff = _stack_scales(scales, active).reshape((P,) + (1,) * w.ndim)
+    return (w[None].astype(F32) + eff * z).astype(w.dtype)
+
+
 def pembed(tok_w, tokens, seed, scale):
     """Perturbed embedding lookup: gather first, then add z only for the
     looked-up rows — the z slice is activation-sized, never (V, D)."""
@@ -117,3 +156,32 @@ def ppos(pos_w, pos, S: int, seed, scale):
     z = rng.counter_normal(seed, idx)
     return (rows.astype(F32) + jnp.asarray(scale, F32) * z).astype(
         pos_w.dtype)
+
+
+def pembed_stack(tok_w, tokens, seeds, scales):
+    """P stacked perturbed embedding lookups: one gather serves every
+    probe; z is regenerated per probe seed (once when all seeds equal —
+    XLA CSEs the identical broadcast).  Returns (P, B, S, D)."""
+    P = jnp.asarray(seeds).shape[0]
+    D = tok_w.shape[-1]
+    rows = tok_w[tokens]                                     # (B, S, D)
+    idx = (tokens.astype(jnp.uint32)[..., None] * jnp.uint32(D)
+           + jnp.arange(D, dtype=jnp.uint32))
+    z = rng.counter_normal(
+        jnp.asarray(seeds, jnp.uint32).reshape((P,) + (1,) * idx.ndim),
+        idx[None])                                           # (P, B, S, D)
+    eff = jnp.asarray(scales, F32).reshape((P,) + (1,) * idx.ndim)
+    return (rows[None].astype(F32) + eff * z).astype(tok_w.dtype)
+
+
+def ppos_stack(pos_w, pos, S: int, seeds, scales):
+    """P stacked perturbed learned-position windows: (P, S, D)."""
+    P = jnp.asarray(seeds).shape[0]
+    D = pos_w.shape[-1]
+    rows = lax.dynamic_slice_in_dim(pos_w, pos, S, 0)
+    r = jnp.asarray(pos, jnp.uint32) + jnp.arange(S, dtype=jnp.uint32)
+    idx = r[:, None] * jnp.uint32(D) + jnp.arange(D, dtype=jnp.uint32)
+    z = rng.counter_normal(
+        jnp.asarray(seeds, jnp.uint32).reshape(P, 1, 1), idx[None])
+    eff = jnp.asarray(scales, F32).reshape(P, 1, 1)
+    return (rows[None].astype(F32) + eff * z).astype(pos_w.dtype)

@@ -35,7 +35,7 @@ def _rep(ndim: int) -> P:
 
 
 def pmatmul_col_sharded(mesh, x, w, seed, scale, active, *, axis="model",
-                        interpret=True):
+                        interpret=None):
     """Column-parallel fused matmul: w (K, N) sharded on N over ``axis``,
     x replicated, output sharded on its last dim."""
     N = w.shape[1]
@@ -56,7 +56,7 @@ def pmatmul_col_sharded(mesh, x, w, seed, scale, active, *, axis="model",
 
 
 def pmatmul_row_sharded(mesh, x, w, seed, scale, active, *, axis="model",
-                        interpret=True):
+                        interpret=None):
     """Row-parallel fused matmul: w (K, N) sharded on K over ``axis``,
     x sharded on its last dim, partial products all-reduced."""
     K, N = w.shape

@@ -234,18 +234,18 @@ def attn_fwd(cfg, p, x, *, mode, cache=None, pos=0, pc=None, pages=None):
         raise NotImplementedError(
             "virtual perturbation does not cover prefix-KV leaves")
     mm = (lambda a, w, name: a @ w) if pc is None else pc.matmul
-    h = apply_norm(cfg, p["norm"] if pc is None else pc.norm(p["norm"],
-                                                             "norm"), x)
+    h = (apply_norm(cfg, p["norm"], x) if pc is None
+         else pc.apply_norm(cfg, p["norm"], x, "norm"))
     q = mm(h, p["wq"], "wq").reshape(B, S, H, dh)
     k = mm(h, p["wk"], "wk").reshape(B, S, KV, dh)
     v = mm(h, p["wv"], "wv").reshape(B, S, KV, dh)
     if cfg.qk_norm:
-        qn = (p["q_norm"]["scale"] if pc is None
-              else pc.vec(p["q_norm"]["scale"], "q_norm/scale"))
-        kn = (p["k_norm"]["scale"] if pc is None
-              else pc.vec(p["k_norm"]["scale"], "k_norm/scale"))
-        q = rms_norm(q, qn)
-        k = rms_norm(k, kn)
+        if pc is None:
+            q = rms_norm(q, p["q_norm"]["scale"])
+            k = rms_norm(k, p["k_norm"]["scale"])
+        else:
+            q = pc.rms_norm(q, p["q_norm"]["scale"], "q_norm/scale")
+            k = pc.rms_norm(k, p["k_norm"]["scale"], "k_norm/scale")
     if mode == "paged":
         positions = jnp.asarray(pos)[:, None] + jnp.arange(S)[None, :]
     else:
@@ -408,8 +408,8 @@ def ffn_params(cfg, key, d_ff=None):
 
 def ffn_fwd(cfg, p, x, d_ff=None, pc=None):
     mm = (lambda a, w, name: a @ w) if pc is None else pc.matmul
-    h = apply_norm(cfg, p["norm"] if pc is None else pc.norm(p["norm"],
-                                                             "norm"), x)
+    h = (apply_norm(cfg, p["norm"], x) if pc is None
+         else pc.apply_norm(cfg, p["norm"], x, "norm"))
     if cfg.act == "silu":
         a = (jax.nn.silu(mm(h, p["wg"], "wg").astype(F32)).astype(x.dtype)
              * mm(h, p["wu"], "wu"))

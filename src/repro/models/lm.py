@@ -167,10 +167,19 @@ def forward(cfg: ModelConfig, params, tokens, *, mode="train", caches=None,
     masks), so the loss equals the materialized perturb-forward-restore
     sequence's without any parameter writes (DESIGN.md §10).
     """
+    P = 0 if (perturb is None or perturb.pair is None) else perturb.pair.n
     if embeds is not None:
         x = embeds.astype(jnp.dtype(cfg.dtype))
     elif perturb is None:
         x = params["embed"]["tok"][tokens]
+    elif P:
+        # stacked probes ride the batch axis p-major: (P, B, S, D) ->
+        # (P*B, S, D), so every probe-agnostic op (attention, rope,
+        # residuals) runs unchanged and only weight reads split by probe
+        x = fused_ref.pembed_stack(
+            params["embed"]["tok"], tokens,
+            fused_ref.layer_seed(perturb.seed, "embed/tok"), perturb.scale)
+        x = x.reshape((-1,) + x.shape[2:])
     else:
         x = fused_ref.pembed(params["embed"]["tok"], tokens,
                              fused_ref.layer_seed(perturb.seed, "embed/tok"),
@@ -182,6 +191,13 @@ def forward(cfg: ModelConfig, params, tokens, *, mode="train", caches=None,
             x = x + params["embed"]["pos"][ppos]
         elif perturb is None:
             x = x + lax.dynamic_slice_in_dim(params["embed"]["pos"], pos, S, 0)
+        elif P:
+            rows = fused_ref.ppos_stack(
+                params["embed"]["pos"], pos, S,
+                fused_ref.layer_seed(perturb.seed, "embed/pos"),
+                perturb.scale)                                # (P, S, D)
+            x = (x.reshape(P, -1, *x.shape[1:]) + rows[:, None]
+                 ).reshape(x.shape)
         else:
             x = x + fused_ref.ppos(params["embed"]["pos"], pos, S,
                                    fused_ref.layer_seed(perturb.seed,
@@ -233,10 +249,11 @@ def forward(cfg: ModelConfig, params, tokens, *, mode="train", caches=None,
             (x, aux_total), nc = lax.scan(body, (x, aux_total), xs)
             if nc is not None:
                 new_caches[f"s{si}"] = nc
-    fn = params["final_norm"]
-    if perturb is not None:
-        fn = perturb.leaf("final_norm").norm(fn)
-    x = layers.apply_norm(cfg, fn, x)
+    if perturb is None:
+        x = layers.apply_norm(cfg, params["final_norm"], x)
+    else:
+        x = perturb.leaf("final_norm").apply_norm(cfg, params["final_norm"],
+                                                  x)
     return x, (new_caches if new_caches else None), aux_total
 
 
@@ -251,7 +268,22 @@ def logits_fn(cfg, params, hidden):
 
 
 def chunked_ce(cfg, params, hidden, labels, loss_mask, perturb=None):
-    """Mean CE over masked positions without materializing (B,S,V) logits."""
+    """Mean CE over masked positions without materializing (B,S,V) logits.
+
+    Under a paired ctx ``hidden`` is (P*B, S, D) (p-major); each probe's
+    CE runs the *literally unpaired* program on its slice (a Python loop
+    over the static P), so the (P,) loss vector is bit-identical to P
+    separate forwards by construction — XLA's float association inside
+    the fused scan body is not stable across batch shapes, so a stacked
+    head reduction cannot make that guarantee (the transformer blocks,
+    where the W traffic lives, still share the paired pass)."""
+    P = 0 if (perturb is None or perturb.pair is None) else perturb.pair.n
+    if P:
+        B0 = hidden.shape[0] // P
+        return jnp.stack([
+            chunked_ce(cfg, params, hidden[pi * B0:(pi + 1) * B0], labels,
+                       loss_mask, perturb=perturb.probe(pi))
+            for pi in range(P)])
     B, S, D = hidden.shape
     chunk = min(CE_CHUNK, S)
     assert S % chunk == 0
@@ -286,13 +318,27 @@ def lm_loss(cfg: ModelConfig, params, batch, aux_coef=0.0, perturb=None):
     {embeds (B,S,D), labels, loss_mask} for stub-frontend archs.
 
     ``perturb`` (fused.PerturbCtx): evaluate loss(theta + s*eps*z)
-    virtually — see forward()."""
+    virtually — see forward().  A paired ctx (``perturb.pair``) runs all
+    P stacked probes through ONE forward and returns a (P,) loss vector
+    (probe order = ctx order; ``fused.make_pair_ctx`` puts +eps first)."""
     hidden, _, aux = forward(cfg, params, batch.get("tokens"),
                              embeds=batch.get("embeds"), mode="train",
                              perturb=perturb)
     loss = chunked_ce(cfg, params, hidden, batch["labels"],
                       batch["loss_mask"], perturb=perturb)
     return loss + aux_coef * aux
+
+
+def lm_loss_pair(cfg: ModelConfig, params, batch, aux_coef=0.0,
+                 perturb=None):
+    """The paired-probe entry point: ``perturb`` must be a stacked ctx
+    (``fused.make_pair_ctx`` / ``make_stack_ctx``); returns the (P,)
+    per-probe loss vector from one fused forward.  Exists as an explicit
+    surface for callers that want the pair contract checked."""
+    if perturb is None or perturb.pair is None:
+        raise ValueError("lm_loss_pair requires a stacked PerturbCtx "
+                         "(fused.make_pair_ctx / make_stack_ctx)")
+    return lm_loss(cfg, params, batch, aux_coef=aux_coef, perturb=perturb)
 
 
 # ---------------------------------------------------------------- serving

@@ -29,18 +29,19 @@ from repro.obs.runtime import NULL_SESSION, Session, session
 from repro.obs.sinks import (JSONLSink, RingSink, read_jsonl,
                              spans_from_jsonl)
 from repro.obs.trace import (CTR_AXPY, CTR_PROBES, CTR_RNG_FOLDS,
-                             CTR_SELECTS, FWD_BASE, FWD_MINUS, FWD_PLUS,
-                             GAUGE_ACTIVE, NULL, PERTURB, SERVE_DECODE,
-                             SERVE_PREFILL, STAGES, Span, SpanRecord,
-                             TRAIN_STEP, Tracer, UPDATE, get_tracer,
-                             set_tracer, tracing, use)
+                             CTR_SELECTS, CTR_WLOAD, CTR_ZREGEN, FWD_BASE,
+                             FWD_MINUS, FWD_PAIR, FWD_PLUS, GAUGE_ACTIVE,
+                             NULL, PERTURB, SERVE_DECODE, SERVE_PREFILL,
+                             STAGES, Span, SpanRecord, TRAIN_STEP, Tracer,
+                             UPDATE, get_tracer, set_tracer, tracing, use)
 
 __all__ = [
-    "CTR_AXPY", "CTR_PROBES", "CTR_RNG_FOLDS", "CTR_SELECTS", "Counter",
-    "FWD_BASE", "FWD_MINUS", "FWD_PLUS", "GAUGE_ACTIVE", "Gauge",
-    "Histogram", "JSONLSink", "LATENCY_BUCKETS", "NULL", "NULL_SESSION",
-    "PERTURB", "Registry", "RingSink", "SERVE_DECODE", "SERVE_PREFILL",
-    "STAGES", "Session", "Span", "SpanRecord", "TRAIN_STEP", "Tracer",
-    "UPDATE", "get_tracer", "profile", "read_jsonl", "session",
-    "set_tracer", "spans_from_jsonl", "tracing", "use",
+    "CTR_AXPY", "CTR_PROBES", "CTR_RNG_FOLDS", "CTR_SELECTS", "CTR_WLOAD",
+    "CTR_ZREGEN", "Counter", "FWD_BASE", "FWD_MINUS", "FWD_PAIR",
+    "FWD_PLUS", "GAUGE_ACTIVE", "Gauge", "Histogram", "JSONLSink",
+    "LATENCY_BUCKETS", "NULL", "NULL_SESSION", "PERTURB", "Registry",
+    "RingSink", "SERVE_DECODE", "SERVE_PREFILL", "STAGES", "Session",
+    "Span", "SpanRecord", "TRAIN_STEP", "Tracer", "UPDATE", "get_tracer",
+    "profile", "read_jsonl", "session", "set_tracer", "spans_from_jsonl",
+    "tracing", "use",
 ]

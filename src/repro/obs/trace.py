@@ -43,18 +43,25 @@ from typing import Any, Dict, List, Optional, Tuple
 PERTURB = "perturb"
 FWD_PLUS = "forward+εz"
 FWD_MINUS = "forward-εz"
+FWD_PAIR = "forward_pair"     # one paired ±εz forward (fused probe stack)
 FWD_BASE = "forward"          # one_sided's unperturbed baseline forward
 UPDATE = "update_axpy"
 TRAIN_STEP = "train/step"     # the trainer's whole-step record (jit-safe)
 SERVE_PREFILL = "serve/prefill"
 SERVE_DECODE = "serve/decode"
-STAGES: Tuple[str, ...] = (PERTURB, FWD_PLUS, FWD_MINUS, UPDATE)
+STAGES: Tuple[str, ...] = (PERTURB, FWD_PLUS, FWD_MINUS, FWD_PAIR, UPDATE)
 
 # Counter names (structural per-run facts, deterministic under a seed).
 CTR_PROBES = "probes_evaluated"
 CTR_AXPY = "axpy_sweeps"
 CTR_RNG_FOLDS = "rng_folds"
 CTR_SELECTS = "layer_selections"
+# Fused-forward W-traffic counters (repro.fused): VMEM tile loads of
+# weight matrices and z-tile regenerations per step — the structural
+# numbers the paired ±εz probe halves (counted host-side from the same
+# grid arithmetic the kernel runs, so ref and pallas impls agree).
+CTR_WLOAD = "w_tile_loads"
+CTR_ZREGEN = "z_regens"
 GAUGE_ACTIVE = "active_layers"
 
 

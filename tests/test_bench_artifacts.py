@@ -1,0 +1,101 @@
+"""Bench trajectory aggregation (benchmarks/run.py).
+
+Regression: artifact collection used to anchor on ``Path.cwd()``, so
+``run.py --json`` invoked from anywhere but the repo root silently
+emitted an empty ``[]`` trajectory while exiting zero — the CI gate
+gated nothing.  Collection is now anchored on the repo root (cwd kept
+as a fallback for locally-run scripts) and ``--check`` refuses an empty
+trajectory outright.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from benchmarks import run as brun  # noqa: E402
+
+CHECKED_IN = {"BENCH_fused.json", "BENCH_serving.json", "BENCH_step.json"}
+
+
+def test_collects_checked_in_artifacts_from_repo_root():
+    arts = brun.collect_artifacts(brun.REPO_ROOT)
+    assert CHECKED_IN <= set(arts)
+    for name in CHECKED_IN:
+        assert "error" not in arts[name], arts[name]
+        assert arts[name].get("bench"), name
+
+
+def test_trajectory_nonempty_regardless_of_cwd(tmp_path, monkeypatch):
+    """--collect-only --json from a foreign cwd still aggregates the
+    repo's artifacts (the original bug: empty trajectory, exit 0)."""
+    monkeypatch.chdir(tmp_path)
+    out = tmp_path / "agg.json"
+    monkeypatch.setattr(sys, "argv",
+                        ["run.py", "--collect-only", "--check",
+                         "--json", str(out)])
+    brun.main()
+    payload = json.loads(out.read_text())
+    assert CHECKED_IN <= set(payload["trajectory"])
+    assert CHECKED_IN <= set(payload["artifacts"])
+
+
+def test_collect_skips_aggregates_and_reports_unreadable(tmp_path):
+    (tmp_path / "BENCH_a.json").write_text(json.dumps({"bench": "a"}))
+    (tmp_path / "BENCH_all.json").write_text(json.dumps({"bench": "all"}))
+    (tmp_path / "BENCH_bad.json").write_text("{not json")
+    arts = brun.collect_artifacts(tmp_path)
+    assert set(arts) == {"BENCH_a.json", "BENCH_bad.json"}
+    assert "error" in arts["BENCH_bad.json"]
+    excl = brun.collect_artifacts(tmp_path, exclude=tmp_path / "BENCH_a.json")
+    assert "BENCH_a.json" not in excl
+
+
+def test_check_fails_on_tripwire_and_empty_trajectory(tmp_path, monkeypatch):
+    bad = {"bench": "x", "tripwires": {"t": {"ok": False, "value": 1,
+                                             "limit": 0}}}
+    assert brun.tripwire_failures({"BENCH_x.json": bad}) == [
+        ("BENCH_x.json", "t", bad["tripwires"]["t"])]
+    # a failed tripwire in the collected set exits nonzero
+    (tmp_path / "BENCH_x.json").write_text(json.dumps(bad))
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setattr(brun, "REPO_ROOT", tmp_path)
+    monkeypatch.setattr(sys, "argv", ["run.py", "--collect-only", "--check"])
+    with pytest.raises(SystemExit, match="tripwires failed"):
+        brun.main()
+    # an empty trajectory is itself a gate failure, not a silent pass
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    monkeypatch.chdir(empty)
+    monkeypatch.setattr(brun, "REPO_ROOT", empty)
+    with pytest.raises(SystemExit, match="gates nothing"):
+        brun.main()
+
+
+def test_fused_tripwires_require_exact_halving():
+    from benchmarks import fused_forward as ff
+    good = {"paired": {"w_tile_loads": 10, "z_regens": 10},
+            "unpaired": {"w_tile_loads": 20, "z_regens": 20}}
+    tw = ff.build_tripwires(good)
+    assert set(tw) == {"paired_w_tile_loads_halved", "paired_z_regens_halved"}
+    assert all(rec["ok"] for rec in tw.values())
+    for broken in ({"paired": {"w_tile_loads": 10, "z_regens": 10},
+                    "unpaired": {"w_tile_loads": 19, "z_regens": 20}},
+                   {"paired": {"w_tile_loads": 0, "z_regens": 0},
+                    "unpaired": {"w_tile_loads": 0, "z_regens": 0}}):
+        assert not all(r["ok"] for r in ff.build_tripwires(broken).values())
+
+
+def test_checked_in_fused_artifact_carries_passing_tripwires():
+    """The committed BENCH_fused.json must itself satisfy the halving
+    tripwires run.py gates on — a stale artifact fails here, not in CI
+    archaeology."""
+    payload = json.loads((REPO / "BENCH_fused.json").read_text())
+    tw = payload.get("tripwires", {})
+    assert {"paired_w_tile_loads_halved", "paired_z_regens_halved"} <= set(tw)
+    assert all(rec["ok"] for rec in tw.values()), tw
+    s = payload["structural"]
+    assert 2 * s["paired"]["w_tile_loads"] == s["unpaired"]["w_tile_loads"]

@@ -13,6 +13,11 @@ Load-bearing claims:
     performs exactly ONE parameter axpy (the update) — no perturb, no
     restore — while matching the materialized dense step's projected
     gradient and parameters.
+  * the pairing contract: the stacked ±εz forward (ProbePair) is
+    bit-identical to the two sequential virtual probe forwards it
+    replaces — per kernel call, per lm_loss, per estimator step — while
+    loading every W tile and regenerating every z tile exactly once for
+    the pair (structural counters).
 """
 import dataclasses
 
@@ -340,6 +345,245 @@ def test_estimator_step_cost_prices_virtual_sweeps():
     # fwd_mem = 2.0 - 3*0.5 = 0.5 -> mat: 0.5 + 1.5 = 2.0, vir: 0.5 + 0.5
     np.testing.assert_allclose(mat["memory_s"], 2.0)
     np.testing.assert_allclose(vir["memory_s"], 1.0)
+
+
+# ------------------------------------------------- paired ±εz probes
+@pytest.mark.parametrize("shape,trans", [((8, 128, 128), False),
+                                         ((16, 200, 96), False),
+                                         ((6, 40, 24), True)])
+def test_pmatmul_stack_bitwise_matches_pmatmul(shape, trans):
+    """One stacked kernel pass == P separate pmatmul calls, bitwise:
+    aligned and ragged (non-128-multiple) tiles, the tied-head trans
+    layout, shared-seed ±εz pairs and per-probe LeZO predicates."""
+    M, K, N = shape
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, M, K))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N))
+    seed = jnp.uint32(21)
+    seeds = jnp.stack([seed, seed])
+    scales = jnp.asarray([1e-3, -1e-3], jnp.float32)
+    for active in (None, jnp.asarray([True, False])):
+        got = fused_matmul.pmatmul_stack(x, w, seeds, scales, active,
+                                         trans=trans, interpret=True,
+                                         shared_seed=True)
+        ref = fref.pmatmul_stack(x, w, seeds, fref._stack_scales(
+            scales, active), trans=trans)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        for p in range(2):
+            a = None if active is None else active[p]
+            want = fused_matmul.pmatmul(x[p], w, seed, scales[p], a,
+                                        trans=trans, interpret=True)
+            assert np.array_equal(np.asarray(got[p]), np.asarray(want)), p
+
+
+def test_paired_z_streams_match_axpy():
+    """RNG contract of the pair (satellite): each sign's z stream is
+    bit-identical to the materialized ``kernels/ops.zo_axpy`` stream —
+    stacked per-layer leaves, the tied head's transposed counter window,
+    and vector leaves with per-seed (unshared) streams."""
+    key = jax.random.PRNGKey(2)
+    step_seed = jnp.uint32(77)
+    # stacked per-layer leaf under a LeZO mask: the paired view's
+    # effective weight must equal the axpy result for both signs
+    ws = jax.random.normal(key, (4, 24, 40))
+    mask = jnp.asarray([1, 0, 1, 1], bool)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (2, 6, 24))
+    path = "stages/s0/b0/mix/wq"
+    for l in range(4):
+        lseed = fref.layer_seed(step_seed, path, l)
+        got = fref.pmatmul_stack(
+            x, ws[l], jnp.stack([lseed, lseed]),
+            jnp.asarray([1e-3, -1e-3], jnp.float32),
+            jnp.broadcast_to(mask[l], (2,)))
+        for p, sign in enumerate((1.0, -1.0)):
+            wm = kops.zo_axpy(ws, path=path, seed=step_seed,
+                              scale=sign * 1e-3, mask=mask)
+            assert np.array_equal(np.asarray(got[p]),
+                                  np.asarray(x[p] @ wm[l])), (l, p)
+    # tied head: trans counters over embed/tok.T
+    tok = jax.random.normal(jax.random.fold_in(key, 1), (40, 24))
+    h = jax.random.normal(jax.random.fold_in(key, 2), (2, 4, 24))
+    lseed = fref.layer_seed(step_seed, "embed/tok")
+    got = fref.pmatmul_stack(h, tok.T, jnp.stack([lseed, lseed]),
+                             jnp.asarray([1e-3, -1e-3], jnp.float32),
+                             trans=True, ld=24)
+    for p, sign in enumerate((1.0, -1.0)):
+        tokp = kops.zo_axpy(tok, path="embed/tok", seed=step_seed,
+                            scale=sign * 1e-3)
+        assert np.array_equal(np.asarray(got[p]),
+                              np.asarray(h[p] @ tokp.T)), p
+    # unshared per-seed streams (one_sided's stacked q probes)
+    w = jax.random.normal(jax.random.fold_in(key, 4), (24, 40))
+    seeds = jnp.stack([rng.fold(step_seed, jnp.uint32(c)) for c in (1, 2)])
+    got = fref.pvec_stack(w, fref.layer_seed(seeds, "head/w"),
+                          jnp.asarray([1e-3, 1e-3], jnp.float32))
+    for p in range(2):
+        wm = kops.zo_axpy(w, path="head/w", seed=seeds[p], scale=1e-3)
+        assert np.array_equal(np.asarray(got[p]), np.asarray(wm)), p
+
+
+@pytest.mark.parametrize("fb", ["virtual_ref", "virtual"])
+def test_paired_loss_bitwise_matches_two_forwards(fb):
+    """lm_loss under the paired ctx returns [l+, l-] bit-identical to
+    the two sequential single-probe virtual forwards it replaces."""
+    mcfg = _tiny_cfg()
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    spec = zo.build_spec(params, lm.zo_group_fn)
+    batch = _batch(mcfg.vocab, B=2, S=16)
+    seed = jnp.uint32(13)
+    masks, _, _ = zo.stratified_select(spec, seed, 1)
+    pair = lm.lm_loss_pair(mcfg, params, batch,
+                           perturb=fused.make_pair_ctx(seed, 1e-3, masks,
+                                                       fb))
+    assert pair.shape == (2,)
+    for i, sign in enumerate((1.0, -1.0)):
+        ctx = fused.make_ctx(seed, sign * 1e-3, masks, fb)
+        want = lm.lm_loss(mcfg, params, batch, perturb=ctx)
+        assert np.array_equal(np.asarray(want), np.asarray(pair[i])), sign
+
+
+def test_stacked_probes_bitwise_match_sequential():
+    """make_stack_ctx (one_sided's q probes, unshared seeds) returns a
+    (P,) loss vector bit-identical to P single-probe forwards."""
+    mcfg = _tiny_cfg()
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    spec = zo.build_spec(params, lm.zo_group_fn)
+    batch = _batch(mcfg.vocab, B=2, S=16)
+    base = jnp.uint32(23)
+    seeds = jnp.stack([rng.fold(base, jnp.uint32(c)) for c in range(3)])
+    per = [zo.stratified_select(spec, s, 1)[0] for s in seeds]
+    stacked = {g: jnp.stack([m[g] for m in per]) for g in per[0]}
+    got = lm.lm_loss(mcfg, params, batch,
+                     perturb=fused.make_stack_ctx(seeds, 1e-3, stacked,
+                                                  "virtual_ref"))
+    assert got.shape == (3,)
+    for p in range(3):
+        ctx = fused.make_ctx(seeds[p], 1e-3, per[p], "virtual_ref")
+        want = lm.lm_loss(mcfg, params, batch, perturb=ctx)
+        assert np.array_equal(np.asarray(want), np.asarray(got[p])), p
+
+
+@pytest.mark.parametrize("name,q", [("two_point", 1), ("one_sided", 3),
+                                    ("averaged", 2)])
+def test_paired_step_bitwise_matches_unpaired(name, q):
+    """The estimator acceptance gate: paired_probes=True produces the
+    bit-identical step (params AND loss) to paired_probes=False on the
+    virtual path — the pairing is a pure execution-schedule change."""
+    mcfg = _tiny_cfg()
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    spec = zo.build_spec(params, lm.zo_group_fn)
+    batch = _batch(mcfg.vocab, B=2, S=16)
+    loss_fn = _loss_fn(mcfg)
+    outs = {}
+    for paired in (True, False):
+        ecfg = estimators.EstimatorConfig(
+            name=name, q=q, n_drop=1, lr=1e-4, eps=1e-3,
+            forward_backend="virtual_ref", paired_probes=paired)
+        step, init = estimators.make_step(loss_fn, spec, ecfg)
+        outs[paired] = jax.jit(step)(params, init(), batch, jnp.int32(2),
+                                     jnp.uint32(9))
+    for a, b in zip(jax.tree.leaves(outs[True][0]),
+                    jax.tree.leaves(outs[False][0])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(np.asarray(outs[True][2]["loss"]),
+                          np.asarray(outs[False][2]["loss"]))
+
+
+def test_paired_step_emits_forward_pair_span():
+    """The eager staged step emits ONE forward_pair span (and no ±εz
+    forward spans) when paired; the unpaired virtual step still emits
+    the two forward spans — and the two schedules produce bit-identical
+    steps (the fast-tier representative of the pairing gate; the jitted
+    per-estimator matrix is tier-2)."""
+    from repro import obs
+    mcfg = _tiny_cfg(layers=1, d_model=32, vocab=64)
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    spec = zo.build_spec(params, lm.zo_group_fn)
+    batch = _batch(mcfg.vocab, B=1, S=8)
+    loss_fn = _loss_fn(mcfg)
+    outs = {}
+    for paired, want_pair in ((True, True), (False, False)):
+        ring = obs.RingSink(64)
+        tr = obs.Tracer(sinks=[ring])
+        ecfg = estimators.EstimatorConfig(
+            name="two_point", n_drop=0, forward_backend="virtual_ref",
+            paired_probes=paired)
+        step, init = estimators.make_step(loss_fn, spec, ecfg)
+        with obs.use(tr):
+            outs[paired] = jax.block_until_ready(
+                step(params, init(), batch, jnp.int32(0), jnp.uint32(1)))
+        names = {r.name for r in ring.records()}
+        if want_pair:
+            assert obs.FWD_PAIR in names
+            assert obs.FWD_PLUS not in names and obs.FWD_MINUS not in names
+        else:
+            assert obs.FWD_PAIR not in names
+            assert obs.FWD_PLUS in names and obs.FWD_MINUS in names
+    for a, b in zip(jax.tree.leaves(outs[True][0]),
+                    jax.tree.leaves(outs[False][0])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(np.asarray(outs[True][2]["loss"]),
+                          np.asarray(outs[False][2]["loss"]))
+
+
+def test_probe_accessor_and_pair_validation():
+    """ProbePair plumbing: probe(i) peels one unpaired probe out of a
+    paired ctx; lm_loss_pair insists on a paired ctx; probe() on an
+    unpaired ctx is an error."""
+    masks = {"g": jnp.asarray([True, False])}
+    ctx = fused.make_pair_ctx(7, 1e-3, masks, "virtual_ref")
+    for i, sign in enumerate((1.0, -1.0)):
+        p = ctx.probe(i)
+        assert p.pair is None
+        np.testing.assert_allclose(float(p.scale), sign * 1e-3)
+        assert p.masks["g"].shape == (2,)
+    with pytest.raises(ValueError):
+        fused.make_ctx(7, 1e-3, None, "virtual_ref").probe(0)
+    mcfg = _tiny_cfg(layers=1, d_model=32, vocab=64)
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    batch = _batch(mcfg.vocab, B=1, S=8)
+    with pytest.raises(ValueError):
+        lm.lm_loss_pair(mcfg, params, batch,
+                        perturb=fused.make_ctx(7, 1e-3, None, "virtual_ref"))
+    with pytest.raises(ValueError):
+        lm.lm_loss_pair(mcfg, params, batch, perturb=None)
+
+
+def test_paired_structural_counters_halve():
+    """The bench tripwire's claim at unit scope: counting the eager
+    forward's grid cells (jax.disable_jit turns the layer scan into a
+    Python loop so the lens counters actually fire), ONE paired forward
+    loads half the W tiles and regenerates half the z tiles of the two
+    probe forwards it replaces."""
+    from repro import obs
+    mcfg = _tiny_cfg(layers=2, d_model=32, vocab=64)
+    params = lm.init_params(mcfg, jax.random.PRNGKey(0))
+    toks = _batch(mcfg.vocab, B=1, S=8)["tokens"]
+    seed = jnp.uint32(5)
+
+    def count(ctxs):
+        tr = obs.Tracer()
+        with obs.use(tr), jax.disable_jit():
+            for ctx in ctxs:
+                lm.forward(mcfg, params, toks, perturb=ctx)
+        return (tr.counters[obs.CTR_WLOAD], tr.counters[obs.CTR_ZREGEN])
+
+    pw, pz = count([fused.make_pair_ctx(seed, 1e-3, None, "virtual_ref")])
+    uw, uz = count([fused.make_ctx(seed, 1e-3, None, "virtual_ref"),
+                    fused.make_ctx(seed, -1e-3, None, "virtual_ref")])
+    assert pw > 0 and 2 * pw == uw
+    assert pz > 0 and 2 * pz == uz
+
+
+def test_interpret_autodetects_platform():
+    """interpret=None resolves per-platform: emulator off TPU, compiled
+    on it — nothing hardcodes interpret=True anymore."""
+    assert fused_matmul.default_interpret() == (
+        jax.default_backend() != "tpu")
+    assert fused_matmul._resolve_interpret(None) == \
+        fused_matmul.default_interpret()
+    assert fused_matmul._resolve_interpret(False) is False
 
 
 # -------------------------------------------------- trainer integration

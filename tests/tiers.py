@@ -92,6 +92,16 @@ SLOW_NODE_PATTERNS = [
     "tests/test_fused.py::test_virtual_jaxpr_has_single_param_write",
     "tests/test_fused.py::test_pmatmul_matches_ref[*bfloat16]",
     "tests/test_fused.py::test_pmatmul_matches_ref[True-*",
+    # -- paired ±εz probes: tier-1 keeps the cheap representatives (the
+    #    eager span+bit-identity step, the RNG-stream property, the
+    #    aligned/trans kernel stacks, the probe accessor); the jitted
+    #    per-estimator matrix, full-model loss pairs, q-probe stacks and
+    #    the disable_jit counter walk are tier-2
+    "tests/test_fused.py::test_paired_structural_counters_halve",
+    "tests/test_fused.py::test_stacked_probes_bitwise_match_sequential",
+    "tests/test_fused.py::test_paired_step_bitwise_matches_unpaired[*",
+    "tests/test_fused.py::test_paired_loss_bitwise_matches_two_forwards[*",
+    "tests/test_fused.py::test_pmatmul_stack_bitwise_matches_pmatmul[shape1-*",
     "tests/test_flash_kernel.py::test_flash_kernel_matches_ref[float32-True-3-64-32-64-32]",
     "tests/test_flash_kernel.py::test_flash_kernel_matches_model_flash",
     # -- unified experiment spec (repro.api, DESIGN.md §11): the
