@@ -7,7 +7,12 @@
 #                      kernels), driven by the shared `bench-smoke` spec
 #                      preset; writes BENCH_fused.json, BENCH_serving.json,
 #                      BENCH_step.json (+ a sample obs span trace) and
-#                      gates every artifact's tripwires via run.py --check
+#                      gates every artifact's tripwires via run.py --check;
+#                      then exercises the run registry end to end: a short
+#                      `launch train` with health telemetry on writes
+#                      artifacts/runs/<run_id>/, `launch report` renders
+#                      its health report, and `launch replay` re-executes
+#                      the run and verifies every recorded scalar bitwise
 #   make specs       - dump every repro.api preset to artifacts/specs/
 #                      (the serialized experiment-spec surface CI archives)
 #   make docs        - regenerate the generated docs (docs/cli.md and the
@@ -32,6 +37,10 @@ bench-smoke:
 	$(PY) benchmarks/serving.py --smoke --preset bench-smoke --json BENCH_serving.json --check
 	$(PY) benchmarks/step_time.py --smoke --preset bench-smoke --json BENCH_step.json --jsonl BENCH_step_trace.jsonl --check
 	$(PY) benchmarks/run.py --collect-only --check
+	$(PY) -m repro.launch train --preset tiny-smoke --telemetry true \
+		--set run.eval_every=0 --set telemetry.health_norms=true
+	$(PY) -m repro.launch report --out artifacts/runs/report.md
+	$(PY) -m repro.launch replay
 
 specs:
 	$(PY) -m repro.launch specs --out artifacts/specs

@@ -147,7 +147,37 @@ def measure_overhead(step, init, params, batch, iters):
             "ratio": t_on / t_off if t_off else 1.0}
 
 
-def build_tripwires(backends, overhead):
+def measure_health_overhead(step, init, params, batch, iters, num_layers):
+    """Jitted step alone vs jitted step + ``HealthAccumulator.record``
+    (with a drain every 8 steps — the log_every cadence the trainer
+    uses): record() only buffers device references, so the ratio pins
+    the claim that per-step health telemetry never syncs the device.
+    Same interleaved, pre-warmed protocol as ``measure_overhead``."""
+    import time
+    args = (params, init(), batch, jnp.int32(0), jnp.uint32(1))
+    for _ in range(2):                       # compile + steady-state warm
+        jax.block_until_ready(step(*args))
+    acc = obs.HealthAccumulator(num_layers)
+    off, on = [], []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(*args))
+        off.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        out = step(*args)
+        acc.record(i, out[2], seed=i)
+        if (i + 1) % 8 == 0:
+            acc.drain()
+        jax.block_until_ready(out)
+        on.append(time.perf_counter() - t0)
+    acc.drain()
+    t_off, t_on = _median(off), _median(on)
+    return {"disabled_s": t_off, "enabled_s": t_on,
+            "ratio": t_on / t_off if t_off else 1.0,
+            "steps_recorded": acc.summary()["steps_recorded"]}
+
+
+def build_tripwires(backends, overhead, health):
     """-> {name: {ok, value, limit, note}} — the convention run.py
     --check collects across every BENCH_*.json artifact."""
     tw = {}
@@ -178,6 +208,13 @@ def build_tripwires(backends, overhead):
         "note": "jitted step, active tracer vs NULL (must be ~1: spans "
                 "no-op inside jit; well under 1 means the disabled "
                 "baseline absorbed warmup cost)"}
+    tw["health_overhead"] = {
+        "ok": (MIN_OVERHEAD_RATIO <= health["ratio"]
+               <= MAX_OVERHEAD_RATIO),
+        "value": health["ratio"],
+        "limit": [MIN_OVERHEAD_RATIO, MAX_OVERHEAD_RATIO],
+        "note": "jitted step + HealthAccumulator record/drain vs plain "
+                "(must be ~1: record buffers device refs without sync)"}
     return tw
 
 
@@ -211,10 +248,14 @@ def run(smoke=False, json_path=None, preset="bench-smoke", jsonl_path=None,
             rows.append((f"stage_{fb}_{name}", st["s"] * 1e6,
                          f"{st['share'] * 100:.0f}% of eager step"))
     # overhead measured once, on the materialized jitted step
-    params, _, _, _, step, init = _parts(mcfg, espec, "materialized")
+    params, est_m, _, _, step, init = _parts(mcfg, espec, "materialized")
     overhead = measure_overhead(step, init, params, batch, jit_iters)
     rows.append(("telemetry_overhead_ratio", 0.0,
                  f"{overhead['ratio']:.3f}x (enabled/disabled, jit)"))
+    health = measure_health_overhead(step, init, params, batch, jit_iters,
+                                     est_m.spec.num_layers)
+    rows.append(("health_overhead_ratio", 0.0,
+                 f"{health['ratio']:.3f}x (record+drain/plain, jit)"))
 
     sweep_share = sum(
         st["s"] for n, st in backends["materialized"]["eager"]["stages"]
@@ -225,7 +266,7 @@ def run(smoke=False, json_path=None, preset="bench-smoke", jsonl_path=None,
                  if ms else "n/a"))
 
     emit(rows)
-    tripwires = build_tripwires(backends, overhead)
+    tripwires = build_tripwires(backends, overhead, health)
     if json_path:
         write_json(json_path, {
             "bench": "step_time",
@@ -234,6 +275,7 @@ def run(smoke=False, json_path=None, preset="bench-smoke", jsonl_path=None,
             "backends": backends,
             "perturb_update_share": sweep_share / ms if ms else None,
             "telemetry_overhead": overhead,
+            "health_overhead": health,
             "tripwires": tripwires,
             "rows": rows_to_json(rows),
         }, spec=espec)

@@ -136,6 +136,17 @@ class Telemetry:
     jsonl: Optional[str] = None   # JSONL span/event log path
     prometheus: Optional[str] = None  # metrics text-dump path
     profile_dir: Optional[str] = None  # jax.profiler trace dir
+    # --- optimizer-health run log (repro.obs.health / .runlog): write a
+    # structured run directory <runs_dir>/<run_id>/ (spec + per-step
+    # scalar JSONL + summary) that `launch report` renders and `launch
+    # replay` re-executes bit-identically.  Independent of `enabled` —
+    # the health stream needs no tracer.  None = no run log.
+    runs_dir: Optional[str] = None
+    run_id: Optional[str] = None  # None = auto (timestamp + seed)
+    # exact per-step ‖lr·g·z‖ via tree_z_norm (regenerates every active
+    # z at drain time — accurate but costs ~1 axpy-equivalent per
+    # logged step; the free E‖z‖²=N estimate is always recorded)
+    health_norms: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

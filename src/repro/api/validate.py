@@ -205,6 +205,15 @@ def validate(spec: Experiment):
         _require(tel.ring > 0 or bool(tel.jsonl), "telemetry.ring",
                  "telemetry.enabled=true needs at least one span sink: "
                  "a ring capacity > 0 or a telemetry.jsonl path")
+    # the health run log is independent of the tracer (`enabled`), but
+    # its sub-knobs make no sense without a run directory to write to
+    if tel.runs_dir is None:
+        for path, val in (("telemetry.run_id", tel.run_id),
+                          ("telemetry.health_norms", tel.health_norms)):
+            _require(not val, path,
+                     "configured while telemetry.runs_dir is unset — no "
+                     "run directory would be written; set "
+                     "telemetry.runs_dir (or clear this field)")
 
     _require(r.steps >= 1, "run.steps", f"must be >= 1, got {r.steps}")
     _require(r.batch_size >= 1, "run.batch_size",

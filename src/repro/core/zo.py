@@ -40,6 +40,7 @@ static size per stacked leaf.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -47,6 +48,7 @@ import jax.numpy as jnp
 
 from repro.core import rng, selection
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 from repro.obs import trace as obs
 
 
@@ -203,6 +205,61 @@ def tree_axpy(params, spec: ZOSpec, seed, scale, masks, idxs=None, *,
             leaf, path=path, seed=seed, scale=scale, decay=decay,
             mask=mask, active_idx=aidx, backend=backend, interpret=interpret))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ------------------------------------------------- health / norm identity
+def global_layer_mask(spec: ZOSpec, masks):
+    """Per-group masks -> one (num_layers,) bool at the global indices."""
+    gmask = jnp.zeros((spec.num_layers,), jnp.bool_)
+    for g, (start, _) in spec.slices.items():
+        gmask = jax.lax.dynamic_update_slice(gmask, masks[g], (start,))
+    return gmask
+
+
+def leaf_shapes(params) -> Tuple[Tuple[int, ...], ...]:
+    """Static leaf shapes in ``ZOSpec.paths`` order (jit-safe input to
+    :func:`active_param_count` / :func:`tree_z_norm`)."""
+    return tuple(tuple(leaf.shape)
+                 for leaf in jax.tree_util.tree_leaves(params))
+
+
+def active_param_count(spec: ZOSpec, shapes, masks):
+    """f32 count of parameters one direction's z touches: full sizes for
+    always-perturbed leaves + mask-selected rows of stacked leaves.
+    Float because 13B-scale counts overflow int32; exact up to 2^24 per
+    leaf times active layers, plenty for the E‖z‖² = N norm estimate."""
+    total = jnp.float32(0.0)
+    for shape, group in zip(shapes, spec.groups):
+        if group is None:
+            total = total + jnp.float32(math.prod(shape))
+        else:
+            per_layer = float(math.prod(shape[1:]))
+            total = total + jnp.sum(
+                masks[group].astype(jnp.float32)) * jnp.float32(per_layer)
+    return total
+
+
+def tree_z_norm(spec: ZOSpec, shapes, seed, masks):
+    """Exact ‖z(seed)‖ over the active subset — the RNG-stream norm
+    identity: z is a pure function of (seed, leaf, layer, element), so
+    the magnitude of the update ``-lr·g·z`` a recorded step applied is
+    ``|lr·g| * tree_z_norm(...)`` without ever materializing z alongside
+    the parameters.  Regenerates each leaf's stream exactly as
+    ``kernels/ops.zo_axpy`` does (same fold(seed, leaf_uid) keying,
+    single pseudo-layer for ungrouped leaves)."""
+    seed = jnp.asarray(seed, jnp.uint32)
+    total = jnp.float32(0.0)
+    for shape, path, group in zip(shapes, spec.paths, spec.groups):
+        leaf_seed = rng.fold(seed, jnp.uint32(rng.leaf_uid(path)))
+        if group is None:
+            z = kref.leaf_normal_nd(leaf_seed, (1,) + tuple(shape))
+            total = total + jnp.sum(z * z)
+        else:
+            z = kref.leaf_normal_nd(leaf_seed, tuple(shape))
+            m = masks[group].astype(jnp.float32).reshape(
+                (shape[0],) + (1,) * (len(shape) - 1))
+            total = total + jnp.sum(m * z * z)
+    return jnp.sqrt(total)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -93,6 +93,21 @@ def make_step(loss_fn: Callable, spec: zo.ZOSpec, cfg: EstimatorConfig,
         new_state = est.update_state(state, dirs, metrics)
         metrics = dict(metrics)
         metrics["lr"] = lr
+        # optimizer-health scalars (repro.obs.health): the direction
+        # coefficients, LeZO layer coverage, and per-direction active
+        # parameter counts make every step auditable / replayable from
+        # the run log.  Cheap (a few reductions over (L,) masks), and
+        # params themselves are untouched.
+        if len(dirs):
+            metrics["coeffs"] = jnp.stack(
+                [jnp.asarray(c, jnp.float32) for c in dirs.coeffs])
+            shapes = zo.leaf_shapes(params)
+            metrics["n_active_params"] = jnp.stack(
+                [zo.active_param_count(spec, shapes, m) for m in dirs.masks])
+            if spec.num_layers:
+                metrics["layer_sel"] = sum(
+                    zo.global_layer_mask(spec, m).astype(jnp.int32)
+                    for m in dirs.masks)
         return p, new_state, metrics
 
     return step, est.init_state

@@ -28,7 +28,7 @@ class AveragedSPSA(Estimator):
         q = cfg.q
         seeds = direction_seeds(seed, q)
         p = params
-        coeffs, masks, idxs = [], [], []
+        coeffs, masks, idxs, gs = [], [], [], []
         loss_acc = g_acc = 0.0
         n_active = None
         for s in seeds:
@@ -52,6 +52,7 @@ class AveragedSPSA(Estimator):
                 p = self._ax(p, cfg.eps, s, m, ix)  # restore before next
             g = (l_plus - l_minus) / (2.0 * cfg.eps)
             coeffs.append(g / q)
+            gs.append(jnp.asarray(g, jnp.float32))
             masks.append(m)
             idxs.append(ix)
             loss_acc = loss_acc + 0.5 * (l_plus + l_minus)
@@ -62,6 +63,8 @@ class AveragedSPSA(Estimator):
         metrics = {
             "loss": loss_acc / q,
             "projected_grad": g_acc / q,
+            "probe_grads": jnp.stack(gs),               # per-direction g_i
+            "eps": jnp.float32(cfg.eps),
             "active_layers": jnp.asarray(n_active, jnp.int32),
         }
         return p, dirs, metrics

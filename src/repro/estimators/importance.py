@@ -21,7 +21,6 @@ Estimator subsystem (DESIGN.md §6).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import zo
@@ -69,10 +68,7 @@ class ImportanceSelect(Estimator):
         return st
 
     def _global_mask(self, masks):
-        gmask = jnp.zeros((self.spec.num_layers,), jnp.bool_)
-        for g, (start, _) in self.spec.slices.items():
-            gmask = jax.lax.dynamic_update_slice(gmask, masks[g], (start,))
-        return gmask
+        return zo.global_layer_mask(self.spec, masks)
 
     # ------------------------------------------------- delegate probing
     def estimate(self, loss_fn, params, batch, seed, state):

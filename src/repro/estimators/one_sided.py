@@ -98,6 +98,8 @@ class OneSidedBatched(Estimator):
         metrics = {
             "loss": l0,                                 # unperturbed loss
             "projected_grad": jnp.mean(g),
+            "probe_grads": g.astype(jnp.float32),       # per-probe g_i
+            "eps": jnp.float32(cfg.eps),
             "active_layers": jnp.asarray(n_active, jnp.int32),
         }
         return params, dirs, metrics

@@ -60,6 +60,8 @@ class TwoPointSPSA(Estimator):
         metrics = {
             "loss": 0.5 * (l_plus + l_minus),
             "projected_grad": g,
+            "probe_grads": jnp.stack([jnp.asarray(g, jnp.float32)]),
+            "eps": jnp.float32(cfg.eps),
             "active_layers": jnp.asarray(n_active, jnp.int32),
         }
         return p, dirs, metrics

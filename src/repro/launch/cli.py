@@ -6,6 +6,8 @@
     python -m repro.launch hillclimb --arch opt-13b --shape train_4k --cfg attn_k_chunk=1024
     python -m repro.launch serve    --arch xlstm-350m --gen 16
     python -m repro.launch specs    --out artifacts/specs
+    python -m repro.launch report   [RUN]           # health report (markdown)
+    python -m repro.launch replay   [RUN] --step 7  # bitwise replay verifier
 
 Every shared flag is *generated* from the ``repro.api`` spec schema —
 ``--<section>.<field>`` for each field, plus the short aliases below —
@@ -55,7 +57,12 @@ ALIASES = {
     "--telemetry": "telemetry.enabled",
     "--trace-jsonl": "telemetry.jsonl",
     "--profile-dir": "telemetry.profile_dir",
+    "--runs-dir": "telemetry.runs_dir",
 }
+
+# commands that operate on an existing run directory — they take no
+# experiment-spec flags (the spec is the run's embedded spec.json)
+_NO_SPEC_CMDS = {"report", "replay"}
 
 _SPEC_DEST = "spec_overrides"
 
@@ -130,11 +137,21 @@ def _write_json(path: str, payload):
 
 # ---------------------------------------------------------------- commands
 def _cmd_train(ns):
+    from repro.obs import runlog
+
     implied = {}
     if ns.optimizer == "mezo":
         implied = {"optimizer.sparsity": 0.0, "optimizer.n_drop": None}
     elif ns.optimizer == "fo":
         implied = {"optimizer.mode": "fo"}
+    # every launch train writes a run directory by default; an explicit
+    # flag wins (implications beat generated flags, so check first) and
+    # --no-runlog turns the registry off entirely
+    flags = getattr(ns, _SPEC_DEST, None) or {}
+    user_set = {kv.partition("=")[0] for kv in ns.set}
+    if (not ns.no_runlog and "telemetry.runs_dir" not in flags
+            and "telemetry.runs_dir" not in user_set):
+        implied["telemetry.runs_dir"] = runlog.DEFAULT_RUNS_DIR
     spec = build_spec(ns, implied)
     result = api.run(spec)
     print(json.dumps(result["summary"], indent=1))
@@ -332,6 +349,23 @@ def _cmd_serve(ns):
             "engine": {"mode": "lockstep"}}
 
 
+def _cmd_report(ns):
+    from repro.launch import report as report_mod
+
+    rep = report_mod.report_run(ns.run, runs_root=ns.runs_root, out=ns.out)
+    print(rep["markdown"])
+    return rep
+
+
+def _cmd_replay(ns):
+    from repro.launch import replay as replay_mod
+
+    rep = replay_mod.replay_run(ns.run, step=ns.step,
+                                runs_root=ns.runs_root)
+    print(json.dumps(rep, indent=1))
+    return rep
+
+
 def _cmd_specs(ns):
     os.makedirs(ns.out, exist_ok=True)
     written = {}
@@ -356,6 +390,9 @@ def _add_extras(cmd: str, ap: argparse.ArgumentParser):
                         choices=["lezo", "mezo", "fo"],
                         help="lezo (spec sparsity) | mezo (sparsity=0) | fo")
         ap.add_argument("--out", default=None, help="write history JSON here")
+        ap.add_argument("--no-runlog", action="store_true",
+                        help="do not write a run directory (default: "
+                             "artifacts/runs/<run_id>/ per train)")
     elif cmd == "evaluate":
         ap.add_argument("--mode", default="zeroshot",
                         choices=["zeroshot", "train"])
@@ -401,11 +438,26 @@ def _add_extras(cmd: str, ap: argparse.ArgumentParser):
                         help="also regenerate the generated docs "
                              "(docs/cli.md + the serving spec table) "
                              "under DIR — `make docs`")
+    elif cmd in ("report", "replay"):
+        ap.add_argument("run", nargs="?", default=None,
+                        help="run id or run-dir path (default: the "
+                             "latest run under --runs-root)")
+        ap.add_argument("--runs-root", default="artifacts/runs",
+                        help="run registry root (launch train default)")
+        if cmd == "replay":
+            ap.add_argument("--step", type=int, default=None,
+                            help="step to verify through (default: last "
+                                 "recorded)")
+        else:
+            ap.add_argument("--out", default=None,
+                            help="also write the markdown here (default: "
+                                 "<run_dir>/report.md only)")
 
 
 COMMANDS = {
     "train": _cmd_train, "evaluate": _cmd_evaluate, "dryrun": _cmd_dryrun,
     "hillclimb": _cmd_hillclimb, "serve": _cmd_serve, "specs": _cmd_specs,
+    "report": _cmd_report, "replay": _cmd_replay,
 }
 
 
@@ -414,7 +466,8 @@ def build_parser() -> argparse.ArgumentParser:
     sub = ap.add_subparsers(dest="cmd", required=True)
     for cmd in COMMANDS:
         p = sub.add_parser(cmd)
-        add_spec_flags(p)
+        if cmd not in _NO_SPEC_CMDS:
+            add_spec_flags(p)
         _add_extras(cmd, p)
     return ap
 

@@ -1,0 +1,236 @@
+"""Seed-lineage replay verifier: re-execute a recorded ZO run, bitwise.
+
+A MeZO/LeZO step is fully determined by scalars — (base_seed, step
+index, projected gradient g, ε, lr) — because z and the LeZO layer
+selection regenerate from the counter RNG.  The run directories written
+by ``launch train`` (repro.obs.runlog) record exactly those scalars, so
+a recorded run can be re-executed and checked *bit for bit*
+(DESIGN.md §13).  This turns the replay property the checkpoint
+manager's docstring only documents into an executable verifier:
+
+  1. rebuild the trainer from the run's embedded ``spec.json``;
+  2. verify the recorded seed lineage (``seed_t = fold(base_seed, t)``);
+  3. re-execute steps through the trainer's own jitted step — starting
+     from the newest usable checkpoint (or the initial params when the
+     run's rows start at 0), regenerating each step's batch through the
+     exact data path ``train()`` uses — and compare every recorded
+     scalar of every step up to ``k``: loss, g per probe, coefficients,
+     ε, lr, layer selection, all as f32 bit equality;
+  4. wherever a checkpoint falls inside the replayed range, compare the
+     re-executed parameters against it bitwise too.
+
+Re-execution goes through ``trainer._step`` — the very jit graph the
+run used — rather than re-applying the recorded axpys in a standalone
+graph: XLA contracts multiply-adds (FMA) differently depending on the
+surrounding graph, so a scalar-only replay graph reproduces the update
+only to ~1 ULP, not bit-exactly.  Same graph + same inputs is exact by
+construction; the recorded (seed, g) stream is what gets *verified*, at
+every step.
+
+Any corruption of the run log (a flipped g bit, an edited loss) or any
+nondeterminism in the step pipeline surfaces as a loud mismatch report.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import rng
+from repro.obs import runlog
+
+# metric keys compared f32-bitwise between the recorded row and the
+# re-executed step (missing on either side = skipped, e.g. layer_sel on
+# a flat tree)
+_COMPARE_SCALARS = ("loss", "projected_grad", "eps", "lr")
+_COMPARE_VECTORS = ("probe_grads", "coeffs", "n_active_params")
+
+
+def _f32(v) -> np.ndarray:
+    return np.asarray(v, np.float32)
+
+
+def _compare_row(t: int, row: Dict, metrics: Dict,
+                 failures: List[str]) -> Dict[str, Any]:
+    """f32-bitwise compare of one recorded row vs re-executed metrics."""
+    matched: Dict[str, Any] = {}
+    for key in _COMPARE_SCALARS:
+        if key in row and key in metrics:
+            rec, new = _f32(row[key]), _f32(metrics[key])
+            matched[key] = float(new)
+            if rec != new:
+                failures.append(
+                    f"step {t} {key}: recorded {float(rec)!r} != "
+                    f"re-executed {float(new)!r}")
+    for key in _COMPARE_VECTORS:
+        if key in row and key in metrics:
+            rec = _f32(row[key]).reshape(-1)
+            new = _f32(metrics[key]).reshape(-1)
+            matched[key] = [float(x) for x in new]
+            if rec.shape != new.shape or not np.array_equal(rec, new):
+                failures.append(
+                    f"step {t} {key}: recorded {rec.tolist()!r} != "
+                    f"re-executed {new.tolist()!r}")
+    if "layer_sel" in row and "layer_sel" in metrics:
+        rec = np.asarray(row["layer_sel"], np.int32)
+        new = np.asarray(metrics["layer_sel"], np.int32)
+        matched["layer_sel"] = new.tolist()
+        if not np.array_equal(rec, new):
+            failures.append(f"step {t} layer_sel: recorded {rec.tolist()!r}"
+                            f" != re-executed {new.tolist()!r}")
+    if "active_layers" in row and "active_layers" in metrics:
+        rec_n, new_n = int(row["active_layers"]), int(metrics["active_layers"])
+        matched["active_layers"] = new_n
+        if rec_n != new_n:
+            failures.append(f"step {t} active_layers: recorded {rec_n} != "
+                            f"re-executed {new_n}")
+    return matched
+
+
+def replay_run(run: Optional[str] = None, step: Optional[int] = None,
+               runs_root: str = runlog.DEFAULT_RUNS_DIR) -> Dict[str, Any]:
+    """Verify ``run`` through step ``step`` (default: last recorded).
+
+    Returns a report dict; ``report["failures"]`` is empty iff every
+    recorded scalar of every replayed step matched the re-execution bit
+    for bit (and re-executed params matched every checkpoint in range).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro import api
+    from repro import tasks as tasks_mod
+    from repro.data import synthetic
+    from repro.train.trainer import Trainer
+
+    rd = runlog.load_run(run, runs_root)
+    if rd.spec is None:
+        raise FileNotFoundError(f"{rd.dir}: no spec.json — cannot replay")
+    if not rd.steps:
+        raise ValueError(f"{rd.dir}: no recorded steps in steps.jsonl")
+    spec = api.from_dict(rd.spec)
+    if spec.optimizer.mode != "zo":
+        raise ValueError(
+            f"replay covers optimizer.mode='zo' runs; this run used "
+            f"{spec.optimizer.mode!r} (momentum/adam state is not part of "
+            "the recorded scalar stream)")
+    # replaying must not write a fresh run dir or trace
+    spec = dataclasses.replace(spec, telemetry=api.Telemetry())
+
+    k = rd.last_step if step is None else int(step)
+    rows = {r["step"]: r for r in rd.steps}
+    if k not in rows:
+        raise KeyError(f"run {rd.run_id!r} has no recorded step {k} "
+                       f"(steps {rd.first_step}..{rd.last_step})")
+
+    failures: List[str] = []
+    checks: List[str] = []
+
+    trainer = Trainer.from_spec(spec)
+    tcfg = trainer.tcfg
+    base_seed = int(np.uint32(rng.fold_py(tcfg.seed, 0xC0FFEE)))
+
+    # ---- seed lineage: every recorded seed must be fold(base_seed, t)
+    for t in sorted(rows):
+        want = int(np.uint32(rng.fold_py(base_seed, t)))
+        got = rows[t].get("seed")
+        if got != want:
+            failures.append(
+                f"seed lineage broken at step {t}: recorded {got}, "
+                f"fold(base_seed={base_seed}, {t}) = {want}")
+    checks.append(f"seed lineage over {len(rows)} recorded steps")
+
+    # ---- pick the start point.  Stateless estimators (everything but
+    # the importance wrapper's EMA scores) can fast-forward to the
+    # newest checkpoint <= k; a stateful estimator must re-warm its
+    # state from the run's first recorded step, exactly like the run
+    # itself did (estimator state is never checkpointed).
+    first = rd.first_step
+    stateless = trainer.est_state == {}
+    ckpt_steps = (set(trainer.ckpt.all_steps())
+                  if trainer.ckpt is not None
+                  and trainer.ckpt.latest() is not None else set())
+    usable = [s for s in ckpt_steps if first <= s <= k]
+    if stateless and usable:
+        start_t = max(usable)
+    elif first in ckpt_steps | {0}:
+        start_t = first
+    else:
+        raise ValueError(
+            f"run {rd.run_id!r} records steps {first}..{rd.last_step} "
+            f"but no usable checkpoint exists under {tcfg.ckpt_dir!r} — "
+            f"cannot reconstruct parameters at step {first}")
+    if start_t == 0:
+        params = trainer.trainable
+    else:
+        params, _, _, _ = trainer.ckpt.restore(trainer.trainable,
+                                               step=start_t)
+        params = jax.tree.map(jnp.asarray, params)
+    missing = [t for t in range(start_t, k + 1) if t not in rows]
+    if missing:
+        raise ValueError(f"run {rd.run_id!r}: steps {missing} missing from "
+                         "the recorded stream — cannot replay through them")
+
+    # ---- re-execute steps start_t..k through the trainer's jitted step
+    # over the regenerated data stream, verifying each recorded row
+    train_data = trainer.make_dataset(4096)
+    stream_data = {kk: v for kk, v in train_data.items()
+                   if kk in tasks_mod.MODEL_BATCH_KEYS}
+    stream = synthetic.batches(stream_data, tcfg.batch_size, tcfg.steps,
+                               seed=tcfg.seed + 7)
+    state = trainer.est_state
+    matched: Dict[str, Any] = {}
+    ckpt_hits = []
+    done = False
+    for t, np_batch in enumerate(stream):
+        if t < start_t:
+            continue
+        if t > k:
+            done = True
+            break
+        batch = trainer._model_batch(np_batch)
+        params, state, metrics = trainer._step(
+            params, state, batch, jnp.int32(t), jnp.uint32(base_seed))
+        matched = _compare_row(t, rows[t], jax.device_get(metrics), failures)
+        # a checkpoint inside the replayed range pins the parameter bits
+        if (t + 1) in ckpt_steps and (t + 1) <= k:
+            ck, _, _, _ = trainer.ckpt.restore(trainer.trainable,
+                                               step=t + 1)
+            leaves_a = jax.tree_util.tree_leaves(
+                jax.tree.map(np.asarray, params))
+            leaves_b = jax.tree_util.tree_leaves(
+                jax.tree.map(np.asarray, ck))
+            bad = sum(0 if np.array_equal(a, b) else 1
+                      for a, b in zip(leaves_a, leaves_b))
+            if bad:
+                failures.append(
+                    f"re-executed params at step {t + 1} differ from "
+                    f"checkpoint {t + 1} on {bad} leaves")
+            else:
+                ckpt_hits.append(t + 1)
+        if t == k:
+            done = True
+            break
+    if not done:
+        raise ValueError(f"step {k} beyond the run's {tcfg.steps}-step "
+                         "data stream")
+    checks.append(
+        f"re-executed steps {start_t}..{k} through the trainer's jitted "
+        "step (regenerated batches) and compared every recorded scalar "
+        "f32-bitwise")
+    if ckpt_hits:
+        checks.append("re-executed params bitwise equal checkpoints "
+                      f"{ckpt_hits}")
+
+    return {
+        "run_id": rd.run_id,
+        "run_dir": rd.dir,
+        "step": k,
+        "estimator": spec.estimator.name,
+        "forward_backend": spec.runtime.forward_backend,
+        "param_start": start_t,
+        "checks": checks,
+        "matched": matched,
+        "failures": failures,
+        "ok": not failures,
+    }

@@ -15,6 +15,12 @@ One lightweight telemetry subsystem used by every hot path:
   * :mod:`~repro.obs.profiler` — optional ``jax.profiler`` region
     behind ``telemetry.profile_dir``.
   * :mod:`~repro.obs.runtime` — ``session(spec.telemetry)`` wiring.
+  * :mod:`~repro.obs.health` — sync-free per-step ZO optimizer vitals
+    (seed lineage, projected gradient g, ε/lr, LeZO layer coverage,
+    update magnitudes) drained in one batched transfer at ``log_every``.
+  * :mod:`~repro.obs.runlog` — structured ``artifacts/runs/<run_id>/``
+    directories (spec + JSONL step stream + summary) that ``launch
+    report`` renders and ``launch replay`` re-executes bit-identically.
 
 Emitters call ``obs.get_tracer()`` unconditionally; the default is the
 disabled :data:`NULL` tracer, whose operations are free, and spans are
@@ -22,9 +28,12 @@ automatically suppressed while jax traces a jit — so instrumentation
 costs nothing on compiled steady-state paths and yields real stage
 timings when the same code runs eagerly (``benchmarks/step_time.py``).
 """
+from repro.obs.health import HealthAccumulator
 from repro.obs.metrics import (Counter, Gauge, Histogram, LATENCY_BUCKETS,
                                Registry)
 from repro.obs.profiler import profile
+from repro.obs.runlog import (DEFAULT_RUNS_DIR, RunDir, RunLog, list_runs,
+                              load_run, make_run_id, resolve_run)
 from repro.obs.runtime import NULL_SESSION, Session, session
 from repro.obs.sinks import (JSONLSink, RingSink, read_jsonl,
                              spans_from_jsonl)
@@ -37,11 +46,12 @@ from repro.obs.trace import (CTR_AXPY, CTR_PROBES, CTR_RNG_FOLDS,
 
 __all__ = [
     "CTR_AXPY", "CTR_PROBES", "CTR_RNG_FOLDS", "CTR_SELECTS", "CTR_WLOAD",
-    "CTR_ZREGEN", "Counter", "FWD_BASE", "FWD_MINUS", "FWD_PAIR",
-    "FWD_PLUS", "GAUGE_ACTIVE", "Gauge", "Histogram", "JSONLSink",
-    "LATENCY_BUCKETS", "NULL", "NULL_SESSION", "PERTURB", "Registry",
-    "RingSink", "SERVE_DECODE", "SERVE_PREFILL", "STAGES", "Session",
-    "Span", "SpanRecord", "TRAIN_STEP", "Tracer", "UPDATE", "get_tracer",
-    "profile", "read_jsonl", "session", "set_tracer", "spans_from_jsonl",
-    "tracing", "use",
+    "CTR_ZREGEN", "Counter", "DEFAULT_RUNS_DIR", "FWD_BASE", "FWD_MINUS",
+    "FWD_PAIR", "FWD_PLUS", "GAUGE_ACTIVE", "Gauge", "HealthAccumulator",
+    "Histogram", "JSONLSink", "LATENCY_BUCKETS", "NULL", "NULL_SESSION",
+    "PERTURB", "Registry", "RingSink", "RunDir", "RunLog", "SERVE_DECODE",
+    "SERVE_PREFILL", "STAGES", "Session", "Span", "SpanRecord",
+    "TRAIN_STEP", "Tracer", "UPDATE", "get_tracer", "list_runs",
+    "load_run", "make_run_id", "profile", "read_jsonl", "resolve_run",
+    "session", "set_tracer", "spans_from_jsonl", "tracing", "use",
 ]

@@ -1,0 +1,171 @@
+"""Optimizer-health accumulator: the ZO step's scalar vitals, sync-free.
+
+A MeZO/LeZO training step is fully determined by a handful of scalars —
+(seed, projected gradient g, ε, lr, active-layer set) — so observing the
+*optimizer* (is g-variance blowing up?  is LeZO starving a layer?  how
+big are the updates actually landing?) costs almost nothing: buffer the
+per-step device scalars, fetch them in one batched transfer every
+``log_every`` steps, and derive the running statistics host-side.
+
+:class:`HealthAccumulator` is that buffer.  The contract (DESIGN.md §13):
+
+  * ``record(step, metrics, seed=...)`` keeps references to the step's
+    device values — **no** host sync, no ``float()``, nothing that would
+    stall the async dispatch pipeline.  It runs every step.
+  * ``drain()`` performs ONE batched ``jax.device_get`` over everything
+    buffered since the last drain and turns it into JSON-ready step rows
+    (the ``repro.obs.runlog`` stream format).  Callers put it where the
+    train loop already syncs (the ``log_every`` boundary).
+  * Running aggregates — Welford mean/variance of g across the
+    antithetic pairs, cumulative per-layer selection counts and
+    last-active step under LeZO sparsity — update at drain time.
+  * The update magnitude ``‖lr·g·z‖`` comes for free from the RNG-stream
+    norm identity: z regenerates from the seed, so ``‖Δθ‖ =
+    |lr|·sqrt(Σ_i g_i²·N_i)`` in expectation (N_i = active parameter
+    count of direction i, E‖z‖² = N) — recorded as ``update_norm_est``
+    every step.  With an exact ``norm_fn`` (``core/zo.tree_z_norm``
+    jitted by the trainer when ``telemetry.health_norms=true``) the
+    literal ``|lr·g|·‖z(seed)‖`` is computed at drain time, off the hot
+    path, as ``update_norm``.
+
+``metrics`` keys are best-effort: a ``zo`` step emits all of them, the
+``zo_momentum``/``fo`` modes only ``loss``/``lr`` — missing keys are
+simply absent from the row, never an error.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+# Step-metric keys the accumulator snapshots when present.
+SCALAR_KEYS = ("loss", "projected_grad", "eps", "lr", "active_layers")
+VECTOR_KEYS = ("probe_grads", "coeffs", "n_active_params", "layer_sel")
+
+
+def _to_float_list(v) -> List[float]:
+    try:
+        return [float(x) for x in v.reshape(-1)]
+    except AttributeError:
+        return [float(x) for x in v]
+
+
+class HealthAccumulator:
+    """Per-step optimizer vitals: sync-free record, batched drain."""
+
+    def __init__(self, num_layers: int = 0, norm_fn=None):
+        self.num_layers = int(num_layers)
+        self.norm_fn = norm_fn      # optional (seed, layer_sel) -> ||z||
+        self._pending: List = []
+        self.rows: List[Dict[str, Any]] = []
+        # Welford running stats over the per-step projected gradient.
+        self.g_count = 0
+        self.g_mean = 0.0
+        self.g_m2 = 0.0
+        # LeZO layer coverage: cumulative selections + last-active step.
+        self.layer_counts = [0] * self.num_layers
+        self.layer_last = [-1] * self.num_layers
+        self.last_step = -1
+
+    # ----------------------------------------------------------- record
+    def record(self, step: int, metrics: Dict[str, Any],
+               seed: Optional[int] = None):
+        """Buffer the step's device values.  Never syncs: the values are
+        fetched in one transfer at the next :meth:`drain`."""
+        keep = {k: metrics[k]
+                for k in SCALAR_KEYS + VECTOR_KEYS if k in metrics}
+        self._pending.append((int(step), seed, keep))
+
+    def __len__(self):
+        return len(self._pending)
+
+    # ------------------------------------------------------------ drain
+    def drain(self) -> List[Dict[str, Any]]:
+        """Fetch everything buffered since the last drain (one batched
+        transfer) and return the new JSON-ready step rows."""
+        if not self._pending:
+            return []
+        import jax
+        fetched = jax.device_get([m for _, _, m in self._pending])
+        new_rows = []
+        for (step, seed, _), vals in zip(self._pending, fetched):
+            row: Dict[str, Any] = {"step": step}
+            if seed is not None:
+                row["seed"] = int(seed)
+            for k in SCALAR_KEYS:
+                if k in vals:
+                    row[k] = float(vals[k])
+            for k in ("probe_grads", "coeffs", "n_active_params"):
+                if k in vals:
+                    row[k] = _to_float_list(vals[k])
+            if "layer_sel" in vals:
+                row["layer_sel"] = [int(x) for x in vals["layer_sel"]]
+            if "active_layers" in row:
+                row["active_layers"] = int(row["active_layers"])
+            self._aggregate(row)
+            new_rows.append(row)
+        self._pending.clear()
+        self.rows.extend(new_rows)
+        return new_rows
+
+    def _aggregate(self, row: Dict[str, Any]):
+        step = row["step"]
+        self.last_step = max(self.last_step, step)
+        g = row.get("projected_grad")
+        if g is not None and math.isfinite(g):
+            self.g_count += 1
+            d = g - self.g_mean
+            self.g_mean += d / self.g_count
+            self.g_m2 += d * (g - self.g_mean)
+            row["g_mean"] = self.g_mean
+            row["g_var"] = self.g_var
+        sel = row.get("layer_sel")
+        if sel is not None and len(sel) == self.num_layers:
+            for i, n in enumerate(sel):
+                if n > 0:
+                    self.layer_counts[i] += n
+                    self.layer_last[i] = step
+        # update magnitude via the RNG-stream norm identity
+        coeffs = row.get("coeffs")
+        lr = row.get("lr")
+        if coeffs is not None and lr is not None:
+            n_act = row.get("n_active_params")
+            if n_act is not None and len(n_act) == len(coeffs):
+                row["update_norm_est"] = abs(lr) * math.sqrt(
+                    sum(c * c * n for c, n in zip(coeffs, n_act)))
+            if (self.norm_fn is not None and len(coeffs) == 1
+                    and "seed" in row and sel is not None):
+                row["update_norm"] = abs(lr * coeffs[0]) * float(
+                    self.norm_fn(row["seed"], sel))
+        return row
+
+    # ---------------------------------------------------------- summary
+    @property
+    def g_var(self) -> float:
+        return self.g_m2 / (self.g_count - 1) if self.g_count > 1 else 0.0
+
+    def staleness(self) -> List[int]:
+        """Steps since each layer was last selected (-1: never)."""
+        return [-1 if last < 0 else self.last_step - last
+                for last in self.layer_last]
+
+    def summary(self) -> Dict[str, Any]:
+        losses = [r["loss"] for r in self.rows if "loss" in r]
+        out: Dict[str, Any] = {
+            "steps_recorded": len(self.rows),
+            "last_step": self.last_step,
+            "g_count": self.g_count,
+            "g_mean": self.g_mean,
+            "g_var": self.g_var,
+            "loss_first": losses[0] if losses else None,
+            "loss_last": losses[-1] if losses else None,
+        }
+        if self.num_layers:
+            out["layer_counts"] = list(self.layer_counts)
+            out["layer_staleness"] = self.staleness()
+            out["layers_never_selected"] = sum(
+                1 for c in self.layer_counts if c == 0)
+        norms = [r["update_norm_est"] for r in self.rows
+                 if "update_norm_est" in r]
+        if norms:
+            out["update_norm_est_last"] = norms[-1]
+        return out

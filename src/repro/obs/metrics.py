@@ -99,7 +99,10 @@ class Histogram:
         seen = 0
         for i, le in enumerate(self.buckets):
             seen += self.counts[i]
-            if seen >= target:
+            # seen > 0 guards empty leading buckets: with q == 0 (or all
+            # observations past this bucket) `seen >= target` is trivially
+            # true and would wrongly return the first bucket's edge.
+            if seen > 0 and seen >= target:
                 return le
         return float("inf")
 

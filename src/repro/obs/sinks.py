@@ -97,13 +97,24 @@ class JSONLSink:
 
 
 def read_jsonl(path: str) -> List[Dict[str, Any]]:
-    """Load every event from a JSONL trace (blank lines skipped)."""
+    """Load every event from a JSONL trace (blank lines skipped).
+
+    A truncated *final* line — the writer crashed mid-append — is
+    silently dropped; corruption anywhere else still raises, since that
+    indicates real damage rather than an interrupted tail write."""
     out = []
     with open(path) as f:
-        for line in f:
-            line = line.strip()
-            if line:
-                out.append(json.loads(line))
+        lines = [ln.strip() for ln in f]
+    last = max((i for i, ln in enumerate(lines) if ln), default=-1)
+    for i, line in enumerate(lines):
+        if not line:
+            continue
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == last:
+                break
+            raise
     return out
 
 

@@ -99,9 +99,27 @@ class Trainer:
                 DeprecationWarning, stacklevel=2)
         self.experiment = _spec
         self.derived = _derived
+        # optimizer-health run log (DESIGN.md §13): telemetry.runs_dir
+        # makes every train() write <runs_dir>/<run_id>/ (spec + per-step
+        # scalar stream + summary) — the substrate of `launch report` and
+        # the bit-identity verifier `launch replay`
+        tel = getattr(_spec, "telemetry", None)
+        self.runlog = None
+        self.health = None
+        self.run_id = None
+        if tel is not None and tel.runs_dir:
+            from repro import api
+            self.run_id = tel.run_id or obs_mod.make_run_id(
+                tel.runs_dir, seed=tcfg.seed)
+            self.runlog = obs_mod.RunLog(tel.runs_dir, self.run_id,
+                                         spec=api.to_dict(_spec))
+            if tel.enabled and not tel.jsonl:
+                # no explicit span sink: the PR 6 stage trace joins the
+                # run dir, so `launch report` can merge stage timings
+                tel = dataclasses.replace(tel, jsonl=self.runlog.trace_path)
         # telemetry: NULL_SESSION unless the spec's telemetry node asked
         # for it — drivers hold a Session unconditionally (DESIGN.md §13)
-        self.obs = obs_mod.session(getattr(_spec, "telemetry", None))
+        self.obs = obs_mod.session(tel)
         self.mcfg, self.task, self.tcfg = model_cfg, task, tcfg
         if tcfg.forward_backend != "materialized":
             zo_cfg = dataclasses.replace(zo_cfg,
@@ -149,8 +167,31 @@ class Trainer:
         self.spec = zo.build_spec(self.trainable, group_fn)
         self._build_loss()
         self._build_step()
+        if self.runlog is not None:
+            norm_fn = None
+            if getattr(_spec.telemetry, "health_norms", False) \
+                    and tcfg.mode == "zo" and self.spec.num_layers:
+                norm_fn = self._make_norm_fn()
+            self.health = obs_mod.HealthAccumulator(self.spec.num_layers,
+                                                    norm_fn=norm_fn)
         self.ckpt = (CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
                      if tcfg.ckpt_dir else None)
+
+    def _make_norm_fn(self):
+        """Exact ‖z(seed)‖ on the recorded layer selection — evaluated at
+        drain time (off the hot path), jitted once per mask dtype."""
+        spec = self.spec
+        shapes = zo.leaf_shapes(self.trainable)
+
+        @jax.jit
+        def znorm(seed, gmask):
+            return zo.tree_z_norm(spec, shapes, seed, spec.split_mask(gmask))
+
+        def norm_fn(seed, layer_sel):
+            gmask = jnp.asarray(np.asarray(layer_sel) > 0)
+            return float(znorm(jnp.uint32(seed), gmask))
+
+        return norm_fn
 
     # ------------------------------------------------------------- loss
     def _build_loss(self):
@@ -229,7 +270,10 @@ class Trainer:
         if self.experiment is None:
             return None
         from repro import api
-        return {"spec": api.to_dict(self.experiment)}
+        extra = {"spec": api.to_dict(self.experiment)}
+        if self.run_id is not None:
+            extra["run_id"] = self.run_id
+        return extra
 
     # ------------------------------------------------------------ train
     def train(self, train_data=None, val_data=None) -> Dict[str, Any]:
@@ -294,6 +338,10 @@ class Trainer:
                 if tr.enabled and "active_layers" in metrics:
                     tr.gauge(obs_mod.GAUGE_ACTIVE,
                              int(metrics["active_layers"]))
+                if self.health is not None:
+                    # buffers device values only — no sync until drain
+                    self.health.record(t, metrics,
+                                       seed=rng.fold_py(int(base_seed), t))
                 # the final step always logs, even off the log_every grid —
                 # a truncated tail made short runs look like they never ran
                 if tcfg.log_every and (t % tcfg.log_every == 0
@@ -303,6 +351,10 @@ class Trainer:
                     history["loss"].append(float(metrics["loss"]))
                     history["wall"].append(now - t0)
                     history["wall_compute"].append(now - t0 - overhead)
+                    if self.runlog is not None:
+                        # the float() above already synced this step; the
+                        # batched device_get rides the same drain point
+                        self.runlog.append(self.health.drain())
                 if tcfg.eval_every and (t + 1) % tcfg.eval_every == 0:
                     te = time.perf_counter()
                     vl, va = self.evaluate(params, val_data)
@@ -325,6 +377,11 @@ class Trainer:
         if best[1] is not None:
             history["best_params"] = best[1]
             history["best_step"] = best[2]
+        if self.runlog is not None:
+            self.runlog.append(self.health.drain())
+            self.runlog.finalize(self.health.summary())
+            history["run_id"] = self.run_id
+            history["run_dir"] = self.runlog.dir
         self.obs.flush()
         return history
 

@@ -38,9 +38,16 @@ def test_train_and_evaluate_defaults_agree():
 
 def test_every_command_shares_the_generated_spec_surface():
     """No per-command argparse duplication for shared fields: every
-    command accepts every generated spec flag and resolves it through
-    the same path."""
+    spec-driven command accepts every generated spec flag and resolves
+    it through the same path.  The run-dir commands (report/replay) are
+    the deliberate exception — their spec is the run's own spec.json,
+    so they must reject spec flags rather than silently ignore them."""
     for cmd in cli.COMMANDS:
+        if cmd in cli._NO_SPEC_CMDS:
+            with pytest.raises(SystemExit):
+                cli.build_parser().parse_args([cmd, "--optimizer.lr",
+                                               "5e-5"])
+            continue
         extra = ["--shape", "train_4k"] if cmd == "hillclimb" else []
         spec = _spec([cmd, "--optimizer.lr", "5e-5", "--arch", "opt-13b",
                       *extra])

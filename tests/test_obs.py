@@ -111,6 +111,24 @@ def test_jsonl_roundtrip(tmp_path):
         assert rec.to_dict() == ev
 
 
+def test_read_jsonl_tolerates_truncated_final_line(tmp_path):
+    """A crash mid-append leaves a torn last line; reading the trace
+    back must drop it silently — but corruption anywhere *else* in the
+    file still raises (that is damage, not an interrupted write)."""
+    path = str(tmp_path / "t.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"type": "span", "name": "a"}) + "\n")
+        f.write('{"type": "span", "na')       # torn tail, no newline
+    assert [e["name"] for e in obs.read_jsonl(path)] == ["a"]
+    with open(path, "a") as f:                # trailing blanks don't mask it
+        f.write("\n\n")
+    assert [e["name"] for e in obs.read_jsonl(path)] == ["a"]
+    with open(path, "a") as f:                # torn line now mid-file
+        f.write(json.dumps({"type": "span", "name": "c"}) + "\n")
+    with pytest.raises(json.JSONDecodeError):
+        obs.read_jsonl(path)
+
+
 # -------------------------------------------------------------- metrics
 def test_counter_and_gauge():
     reg = obs.Registry()
@@ -140,6 +158,40 @@ def test_histogram_cumulative_buckets_and_text():
     assert "# TYPE lat histogram" in text and "# HELP lat latency" in text
     assert h.quantile(0.5) == 1.0
     assert h.quantile(1.0) == float("inf")
+
+
+def test_histogram_quantile_edge_cases():
+    import math
+    reg = obs.Registry()
+    h = reg.histogram("q", buckets=(1.0, 2.0))
+    assert math.isnan(h.quantile(0.5))        # no data: nan, not an edge
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        h.quantile(1.5)
+    h.observe(1.5)                            # lands in the (1, 2] bucket
+    # regression: q == 0 must skip empty leading buckets, not report the
+    # first bucket's edge
+    assert h.quantile(0.0) == 2.0
+    assert h.quantile(1.0) == 2.0
+    g = reg.histogram("q2", buckets=(1.0, 2.0))
+    g.observe(3.0)
+    g.observe(4.0)                            # everything past the last edge
+    for q in (0.0, 0.5, 1.0):
+        assert g.quantile(q) == float("inf")
+
+
+def test_registry_exposition_deterministic():
+    """Same metrics, different registration order -> identical text, so
+    the Prometheus dump (and any diff over it) is byte-stable."""
+    def build(order):
+        reg = obs.Registry()
+        ops = {"c": lambda r: r.counter("ctr", "c help").inc(3),
+               "g": lambda r: r.gauge("depth").set(2.0),
+               "h": lambda r: r.histogram("lat", buckets=(0.5,))
+               .observe(0.25)}
+        for k in order:
+            ops[k](reg)
+        return reg.to_text()
+    assert build("cgh") == build("hgc") == build("ghc")
 
 
 def test_registry_dump(tmp_path):
@@ -172,6 +224,17 @@ def test_telemetry_enabled_needs_a_sink_and_sane_ring():
     api.validate(api.with_overrides(
         base, {"telemetry.enabled": True, "telemetry.ring": 0,
                "telemetry.jsonl": "t.jsonl"}))
+
+
+def test_health_knobs_require_runs_dir():
+    base = api.presets.get("tiny-smoke")
+    for field, value in [("run_id", "r1"), ("health_norms", True)]:
+        spec = api.with_overrides(base, {f"telemetry.{field}": value})
+        with pytest.raises(api.SpecError, match="telemetry.runs_dir"):
+            api.validate(spec)
+    api.validate(api.with_overrides(base, {
+        "telemetry.runs_dir": "artifacts/runs",
+        "telemetry.run_id": "r1", "telemetry.health_norms": True}))
 
 
 def test_telemetry_fields_resume_mutable():

@@ -1,0 +1,403 @@
+"""Optimizer-health telemetry + run registry suite (DESIGN.md §13).
+
+Covers the :class:`repro.obs.health.HealthAccumulator` contract
+(sync-free record, batched drain, Welford g statistics, LeZO layer
+coverage/staleness, the RNG-stream update-norm identity), the run-dir
+writer/reader round trip (``repro.obs.runlog``), the ``launch train``
+run-registry implication, and the two run-dir commands: ``launch
+report`` (markdown health report) and ``launch replay`` (the bitwise
+seed-lineage verifier — including corruption detection and
+resume-then-replay across a checkpoint boundary).
+"""
+import json
+import math
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import rng
+from repro.obs import health, runlog
+
+SMOKE = "tiny-smoke"
+
+
+def _fold(seed, data):
+    return int(np.uint32(rng.fold_py(int(seed), int(data))))
+
+
+# ===================================================== HealthAccumulator
+class _Probe:
+    """Sentinel value: counts host conversions, so a test can prove that
+    ``record()`` never syncs and ``drain()`` fetches exactly once."""
+
+    def __init__(self, value):
+        self.value = value
+        self.conversions = 0
+
+    def __float__(self):
+        self.conversions += 1
+        return float(self.value)
+
+
+def test_health_record_is_sync_free():
+    pytest.importorskip("jax")
+    acc = health.HealthAccumulator()
+    probe = _Probe(2.5)
+    acc.record(0, {"loss": probe, "ignored_key": object()}, seed=11)
+    acc.record(1, {"loss": 3.0})
+    assert len(acc) == 2
+    assert probe.conversions == 0             # record buffered, no sync
+    rows = acc.drain()
+    assert probe.conversions == 1             # drain fetched exactly once
+    assert len(acc) == 0 and acc.drain() == []
+    assert rows[0] == {"step": 0, "seed": 11, "loss": 2.5}
+    assert rows[1]["loss"] == 3.0 and "seed" not in rows[1]
+
+
+def test_health_welford_matches_numpy():
+    gs = np.random.default_rng(0).normal(size=12)
+    acc = health.HealthAccumulator()
+    for t, g in enumerate(gs):
+        acc.record(t, {"projected_grad": float(g), "loss": 1.0})
+        if t % 3 == 2:                        # drain mid-stream, repeatedly
+            acc.drain()
+    acc.drain()
+    assert acc.g_count == len(gs)
+    assert acc.g_mean == pytest.approx(np.mean(gs), rel=1e-12)
+    assert acc.g_var == pytest.approx(np.var(gs, ddof=1), rel=1e-12)
+    # per-row running stats are present, and the first row's var is 0
+    assert acc.rows[0]["g_var"] == 0.0
+    assert acc.rows[-1]["g_mean"] == pytest.approx(np.mean(gs))
+    # non-finite g never poisons the stats
+    acc.record(len(gs), {"projected_grad": float("nan")})
+    acc.drain()
+    assert acc.g_count == len(gs) and math.isfinite(acc.g_mean)
+
+
+def test_health_layer_coverage_and_staleness():
+    acc = health.HealthAccumulator(num_layers=3)
+    sels = [[1, 0, 0], [1, 1, 0], [0, 1, 0], [1, 0, 0]]
+    for t, sel in enumerate(sels):
+        acc.record(t, {"layer_sel": np.asarray(sel),
+                       "active_layers": sum(sel), "loss": float(t)})
+    acc.drain()
+    assert acc.layer_counts == [3, 2, 0]
+    assert acc.staleness() == [0, 1, -1]      # -1: never selected
+    s = acc.summary()
+    assert s["steps_recorded"] == 4 and s["last_step"] == 3
+    assert s["layer_counts"] == [3, 2, 0]
+    assert s["layer_staleness"] == [0, 1, -1]
+    assert s["layers_never_selected"] == 1
+    assert s["loss_first"] == 0.0 and s["loss_last"] == 3.0
+
+
+def test_health_update_norm_identity():
+    # estimate: |lr|·sqrt(Σ c²·N) from E||z||² = N; exact: |lr·c0|·||z||
+    acc = health.HealthAccumulator(num_layers=2,
+                                   norm_fn=lambda seed, sel: 2.0)
+    acc.record(0, {"coeffs": np.asarray([0.5]),
+                   "n_active_params": np.asarray([100.0]),
+                   "lr": 0.01, "layer_sel": np.asarray([1, 0])}, seed=7)
+    acc.record(1, {"coeffs": np.asarray([0.5, -0.25]),
+                   "n_active_params": np.asarray([100.0, 400.0]),
+                   "lr": 0.01, "layer_sel": np.asarray([0, 1])}, seed=8)
+    r0, r1 = acc.drain()
+    assert r0["update_norm_est"] == pytest.approx(0.01 * math.sqrt(25.0))
+    assert r0["update_norm"] == pytest.approx(abs(0.01 * 0.5) * 2.0)
+    assert r1["update_norm_est"] == pytest.approx(
+        0.01 * math.sqrt(0.25 * 100 + 0.0625 * 400))
+    assert "update_norm" not in r1            # exact norm is q == 1 only
+    assert acc.summary()["update_norm_est_last"] == r1["update_norm_est"]
+
+
+# ============================================================== run dirs
+def test_runlog_roundtrip(tmp_path):
+    root = str(tmp_path)
+    log = runlog.RunLog(root, "r1", spec={"estimator": {"name": "x"}})
+    log.append([{"step": 1, "loss": 2.0}])
+    log.append([{"step": 0, "loss": 1.0}])
+    log.finalize({"steps_recorded": 2})
+    rd = runlog.load_run("r1", root)
+    assert rd.run_id == "r1" and rd.spec == {"estimator": {"name": "x"}}
+    assert [r["step"] for r in rd.steps] == [0, 1]    # sorted on load
+    assert rd.first_step == 0 and rd.last_step == 1
+    assert rd.step_row(1)["loss"] == 2.0
+    with pytest.raises(KeyError, match="no recorded step 5"):
+        rd.step_row(5)
+    assert rd.summary == {"steps_recorded": 2}
+    # floats survive the JSON round trip bit-for-bit (replay's bedrock)
+    g = float(np.float32(np.pi) * np.float32(1e-7))
+    log2 = runlog.RunLog(root, "r2")
+    log2.append([{"step": 0, "projected_grad": g}])
+    log2.finalize()
+    back = runlog.load_run("r2", root).steps[0]["projected_grad"]
+    assert np.float32(back).tobytes() == np.float32(g).tobytes()
+
+
+def test_run_resolution_and_ids(tmp_path):
+    root = str(tmp_path)
+    assert runlog.list_runs(root) == []
+    with pytest.raises(FileNotFoundError, match="no run directories"):
+        runlog.resolve_run(None, root)
+    rid = runlog.make_run_id(root, seed=3, now=0.0)
+    assert rid.endswith("-s3")
+    runlog.RunLog(root, rid, spec={}).finalize()
+    # collision under the same timestamp gets a -N suffix
+    rid2 = runlog.make_run_id(root, seed=3, now=0.0)
+    assert rid2 == f"{rid}-2" and rid2 != rid
+    os.utime(os.path.join(root, rid))         # make rid the newest
+    os.mkdir(os.path.join(root, "not-a-run")) # no spec/steps: not listed
+    assert runlog.list_runs(root) == [rid]
+    assert runlog.resolve_run(None, root) == os.path.join(root, rid)
+    assert runlog.resolve_run(rid, root) == os.path.join(root, rid)
+    assert runlog.resolve_run(os.path.join(root, rid)) \
+        == os.path.join(root, rid)
+    with pytest.raises(FileNotFoundError, match="known runs"):
+        runlog.resolve_run("missing", root)
+
+
+# ============================================== CLI: the train implication
+def _capture_api_run(monkeypatch):
+    captured = []
+
+    def fake_run(spec):
+        captured.append(spec)
+        return {"summary": {}, "spec": api.to_dict(spec), "history": {}}
+
+    monkeypatch.setattr(api, "run", fake_run)
+    return captured
+
+
+def test_cli_train_implies_run_registry(monkeypatch):
+    from repro.launch import cli
+    captured = _capture_api_run(monkeypatch)
+    cli.main(["train", "--preset", SMOKE])
+    assert captured[-1].telemetry.runs_dir == runlog.DEFAULT_RUNS_DIR
+    cli.main(["train", "--preset", SMOKE, "--no-runlog"])
+    assert captured[-1].telemetry.runs_dir is None
+    # an explicit flag or --set always beats the implication
+    cli.main(["train", "--preset", SMOKE, "--runs-dir", "X"])
+    assert captured[-1].telemetry.runs_dir == "X"
+    cli.main(["train", "--preset", SMOKE, "--set",
+              "telemetry.runs_dir=Y"])
+    assert captured[-1].telemetry.runs_dir == "Y"
+
+
+def test_docgen_documents_run_commands():
+    from repro.launch import docgen
+    for cmd in ("report", "replay"):
+        flags = [row[0] for row in docgen._extras_rows(cmd)]
+        assert "RUN" in flags                 # positional, not an option
+        assert "--runs-root" in flags
+    assert "--step" in [r[0] for r in docgen._extras_rows("replay")]
+    assert "--no-runlog" in [r[0] for r in docgen._extras_rows("train")]
+
+
+# ================================= end to end: train -> report -> replay
+@pytest.fixture(scope="module")
+def trained_run(tmp_path_factory):
+    """One real telemetry-on training run (two_point, materialized,
+    checkpoints at 2 and 4), shared by the run-dir/report/replay tests."""
+    pytest.importorskip("jax")
+    root = str(tmp_path_factory.mktemp("runs"))
+    ckpt_dir = str(tmp_path_factory.mktemp("ckpt") / "run")
+    spec = api.with_overrides(api.presets.get(SMOKE), {
+        "run.steps": 4, "run.log_every": 2, "run.eval_every": 0,
+        "run.ckpt_every": 2, "run.ckpt_dir": ckpt_dir,
+        "run.keep_ckpts": 4,
+        "telemetry.enabled": True, "telemetry.runs_dir": root,
+        "telemetry.health_norms": True})
+    api.validate(spec)
+    result = api.run(spec)
+    return {"spec": spec, "result": result, "root": root,
+            "ckpt_dir": ckpt_dir}
+
+
+def test_run_dir_contents(trained_run):
+    rd = runlog.load_run(None, trained_run["root"])
+    assert rd.run_id == trained_run["result"]["summary"]["run_id"]
+    for name in (runlog.SPEC_FILE, runlog.STEPS_FILE,
+                 runlog.SUMMARY_FILE, runlog.TRACE_FILE):
+        assert os.path.isfile(os.path.join(rd.dir, name)), name
+    assert rd.spec == api.to_dict(trained_run["spec"])
+    assert [r["step"] for r in rd.steps] == [0, 1, 2, 3]
+    base = _fold(trained_run["spec"].run.seed, 0xC0FFEE)
+    n_layers = len(rd.steps[0]["layer_sel"])
+    for t, row in enumerate(rd.steps):
+        assert row["seed"] == _fold(base, t)  # the recorded seed lineage
+        for key in ("loss", "eps", "lr", "g_mean", "g_var",
+                    "update_norm", "update_norm_est"):
+            assert key in row, key
+        assert len(row["probe_grads"]) == 1   # two_point: q == 1
+        assert len(row["coeffs"]) == 1
+        assert len(row["n_active_params"]) == 1
+        assert len(row["layer_sel"]) == n_layers
+        assert row["active_layers"] == sum(row["layer_sel"])
+        assert 1 <= row["active_layers"] < n_layers   # LeZO sparsity on
+        # applied values are the f32 the step actually used
+        assert row["eps"] == float(np.float32(
+            trained_run["spec"].optimizer.eps))
+        assert row["lr"] == float(np.float32(
+            trained_run["spec"].optimizer.lr))
+        # E||z||² = N: the estimate must sit close to the exact norm
+        assert row["update_norm"] == pytest.approx(
+            row["update_norm_est"], rel=0.05)
+
+
+def test_run_summary_aggregates(trained_run):
+    rd = runlog.load_run(None, trained_run["root"])
+    s = rd.summary
+    gs = [r["projected_grad"] for r in rd.steps]
+    assert s["steps_recorded"] == 4 and s["last_step"] == 3
+    assert s["g_count"] == 4
+    assert s["g_mean"] == pytest.approx(np.mean(gs), rel=1e-9)
+    assert s["g_var"] == pytest.approx(np.var(gs, ddof=1), rel=1e-9)
+    assert s["loss_first"] == rd.steps[0]["loss"]
+    assert s["loss_last"] == rd.steps[-1]["loss"]
+    assert sum(s["layer_counts"]) == sum(r["active_layers"]
+                                         for r in rd.steps)
+    assert len(s["layer_staleness"]) == len(rd.steps[0]["layer_sel"])
+    assert s["update_norm_est_last"] == rd.steps[-1]["update_norm_est"]
+
+
+def test_run_id_lands_in_checkpoint_manifest(trained_run):
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(trained_run["ckpt_dir"])
+    assert sorted(mgr.all_steps()) == [2, 4]
+    extra = mgr.read_manifest()["extra"]
+    assert extra["run_id"] == trained_run["result"]["summary"]["run_id"]
+
+
+def test_report_renders_from_run_dir(trained_run, tmp_path):
+    from repro.launch import report as report_mod
+    out = str(tmp_path / "r.md")
+    rep = report_mod.report_run(None, runs_root=trained_run["root"],
+                                out=out)
+    md = rep["markdown"]
+    for section in ("# Run report", "## Spec", "## Convergence",
+                    "## Applied hyperparameters", "## LeZO layer coverage",
+                    "## Stage timings"):
+        assert section in md, section
+    assert rep["run_id"] in md
+    assert "two_point" in md
+    # written next to the run AND to --out (which becomes the path)
+    assert rep["path"] == out
+    in_dir = os.path.join(rep["run_dir"], report_mod.REPORT_FILE)
+    for path in (out, in_dir):
+        with open(path) as f:
+            assert f.read() == md
+    again = report_mod.report_run(None, runs_root=trained_run["root"])
+    assert again["markdown"] == md
+
+
+def test_cli_report_prints_markdown(trained_run, capsys):
+    from repro.launch import cli
+    assert cli.console(["report", "--runs-root",
+                        trained_run["root"]]) == 0
+    assert "# Run report" in capsys.readouterr().out
+
+
+def test_replay_verifies_run_bitwise(trained_run):
+    from repro.launch import replay as replay_mod
+    rep = replay_mod.replay_run(None, runs_root=trained_run["root"])
+    assert rep["ok"], rep["failures"]
+    assert rep["step"] == 3 and rep["estimator"] == "two_point"
+    # stateless estimator: fast-forwards to the newest checkpoint <= k
+    assert rep["param_start"] == 2
+    assert any("seed lineage" in c for c in rep["checks"])
+    for key in ("loss", "projected_grad", "eps", "lr", "layer_sel"):
+        assert key in rep["matched"], key
+    rd = runlog.load_run(None, trained_run["root"])
+    assert rep["matched"]["loss"] == rd.step_row(3)["loss"]
+
+
+@pytest.mark.slow
+def test_replay_detects_corruption(trained_run, tmp_path):
+    """Golden gate: a single flipped mantissa bit in a recorded g (and a
+    broken seed lineage) must fail the replay loudly."""
+    from repro.launch import replay as replay_mod
+    root = str(tmp_path / "runs")
+    rd = runlog.load_run(None, trained_run["root"])
+    dst = os.path.join(root, rd.run_id)
+    shutil.copytree(rd.dir, dst)
+    steps_path = os.path.join(dst, runlog.STEPS_FILE)
+    rows = [json.loads(ln) for ln in open(steps_path)]
+    for row in rows:
+        if row.get("step") == 3:              # flip g's lowest mantissa bit
+            # (inside the replayed range — replay fast-forwards to the
+            # newest checkpoint, so earlier rows are lineage-checked only)
+            bits = np.float32(row["projected_grad"]).view(np.uint32)
+            row["projected_grad"] = float(
+                (bits ^ np.uint32(1)).view(np.float32))
+        if row.get("step") == 0:              # and break the seed lineage
+            row["seed"] = (row["seed"] + 1) & 0xFFFFFFFF
+    with open(steps_path, "w") as f:
+        f.writelines(json.dumps(r) + "\n" for r in rows)
+    rep = replay_mod.replay_run(None, runs_root=root)
+    assert not rep["ok"]
+    assert any("seed lineage" in msg and "step 0" in msg
+               for msg in rep["failures"]), rep["failures"]
+    assert any("projected_grad" in msg and "step 3" in msg
+               for msg in rep["failures"]), rep["failures"]
+    # the pristine sibling keys of the corrupted row still matched
+    assert not any("loss" in msg for msg in rep["failures"])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("est,backend", [
+    ("one_sided", "materialized"),
+    ("averaged", "virtual_ref"),
+    ("importance", "materialized"),
+    ("two_point", "virtual_ref"),
+])
+def test_replay_matrix(tmp_path, est, backend):
+    """Bit-identical replay from step 0 across estimators x forward
+    backends (no checkpoints: parameters re-derive from the init)."""
+    pytest.importorskip("jax")
+    from repro.launch import replay as replay_mod
+    spec = api.with_overrides(api.presets.get(SMOKE), {
+        "run.steps": 3, "run.log_every": 1, "run.eval_every": 0,
+        "estimator.name": est, "runtime.forward_backend": backend,
+        "telemetry.runs_dir": str(tmp_path)})
+    api.validate(spec)
+    api.run(spec)
+    rep = replay_mod.replay_run(None, runs_root=str(tmp_path))
+    assert rep["ok"], rep["failures"]
+    assert rep["param_start"] == 0 and rep["step"] == 2
+    assert rep["estimator"] == est
+    assert rep["forward_backend"] == backend
+
+
+@pytest.mark.slow
+def test_resume_then_replay_across_checkpoint(tmp_path):
+    """A resumed run's log starts mid-stream; replay must reconstruct
+    the resume point from the checkpoint (importance is stateful, so it
+    must re-warm from the run's own first step) and still pin the
+    parameters bitwise against a checkpoint inside the replayed range."""
+    pytest.importorskip("jax")
+    from repro.launch import replay as replay_mod
+    ckpt_dir = str(tmp_path / "ckpt")
+    base = {"run.log_every": 1, "run.eval_every": 0,
+            "run.ckpt_every": 2, "run.ckpt_dir": ckpt_dir,
+            "run.keep_ckpts": 8, "estimator.name": "importance"}
+    spec1 = api.with_overrides(api.presets.get(SMOKE), dict(
+        base, **{"run.steps": 4,
+                 "telemetry.runs_dir": str(tmp_path / "runs1")}))
+    api.validate(spec1)
+    api.run(spec1)
+    spec2 = api.with_overrides(api.presets.get(SMOKE), dict(
+        base, **{"run.steps": 8,
+                 "telemetry.runs_dir": str(tmp_path / "runs2")}))
+    api.validate(spec2)
+    api.run(spec2)
+    rd = runlog.load_run(None, str(tmp_path / "runs2"))
+    assert rd.first_step == 4 and rd.last_step == 7   # resumed mid-stream
+    rep = replay_mod.replay_run(None, step=7,
+                                runs_root=str(tmp_path / "runs2"))
+    assert rep["ok"], rep["failures"]
+    assert rep["param_start"] == 4            # stateful: the run's start
+    assert any("[6]" in c for c in rep["checks"]
+               if "checkpoint" in c), rep["checks"]
