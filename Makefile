@@ -13,6 +13,12 @@
 #                      artifacts/runs/<run_id>/, `launch report` renders
 #                      its health report, and `launch replay` re-executes
 #                      the run and verifies every recorded scalar bitwise
+#   make swarm-smoke - distributed-swarm gate: the scaling/bytes-per-step
+#                      benchmark with its tripwires (BENCH_dist.json), then
+#                      a 2-worker swarm run that hard-kills a worker
+#                      mid-run (chaos_crash) and recovers through the
+#                      elastic-rejoin path, verified bit-for-bit by
+#                      `launch replay`
 #   make specs       - dump every repro.api preset to artifacts/specs/
 #                      (the serialized experiment-spec surface CI archives)
 #   make docs        - regenerate the generated docs (docs/cli.md and the
@@ -23,7 +29,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench-smoke specs docs lint
+.PHONY: test test-fast bench-smoke swarm-smoke specs docs lint
 
 test:
 	$(PY) -m pytest -x -q
@@ -41,6 +47,16 @@ bench-smoke:
 		--set run.eval_every=0 --set telemetry.health_norms=true
 	$(PY) -m repro.launch report --out artifacts/runs/report.md
 	$(PY) -m repro.launch replay
+
+swarm-smoke:
+	$(PY) benchmarks/distributed.py --smoke --json BENCH_dist.json --check
+	$(PY) -m repro.launch swarm --preset swarm-smoke \
+		--set run.steps=30 --set run.ckpt_every=10 \
+		--set run.ckpt_dir=artifacts/swarm-ckpt \
+		--set swarm.chaos_crash=1:3 --set swarm.chaos_seed=7 \
+		--out artifacts/swarm.json
+	$(PY) -m repro.launch replay
+	$(PY) benchmarks/run.py --collect-only --check
 
 specs:
 	$(PY) -m repro.launch specs --out artifacts/specs

@@ -77,14 +77,16 @@ def main() -> None:
 
     results = {}
     if not args.collect_only:
-        from benchmarks import (accuracy, common, estimator_sweep,
-                                fused_forward, peft, roofline, serving,
-                                sparsity_sweep, speedup, stage_breakdown,
-                                step_time, token_length, zo_momentum)
+        from benchmarks import (accuracy, common, distributed,
+                                estimator_sweep, fused_forward, peft,
+                                roofline, serving, sparsity_sweep, speedup,
+                                stage_breakdown, step_time, token_length,
+                                zo_momentum)
         print("name,us_per_call,derived")
         for mod in (stage_breakdown, step_time, fused_forward, speedup,
                     sparsity_sweep, token_length, accuracy, peft,
-                    zo_momentum, estimator_sweep, serving, roofline):
+                    zo_momentum, estimator_sweep, serving, distributed,
+                    roofline):
             print(f"# --- {mod.__name__} ---")
             rows = mod.run()
             results[mod.__name__.split(".")[-1]] = common.rows_to_json(rows)

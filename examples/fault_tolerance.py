@@ -4,7 +4,9 @@ Run:  PYTHONPATH=src python examples/fault_tolerance.py
 
 Because every LeZO update is a pure function of (base_seed, step), a
 restore reproduces the exact parameter trajectory the uninterrupted run
-would have produced.  Also shows the straggler loss-quorum mode.
+would have produced.  Also shows the straggler loss-quorum mode.  Every
+scenario is a spec diff on the unified experiment API (DESIGN.md §11) —
+the multi-process version of the same story is examples/swarm_demo.py.
 """
 import sys, pathlib, shutil, tempfile
 sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
@@ -12,28 +14,22 @@ sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
 import jax
 import numpy as np
 
-from repro.configs import opt
-from repro.core import zo
-from repro.data import synthetic
-from repro.train.trainer import Trainer, TrainConfig
+from repro import api
 
-mcfg = opt.opt_tiny(layers=2, d_model=64, vocab=256)
-task = synthetic.TaskConfig(vocab=256, seq_len=48, n_classes=2)
-zcfg = zo.ZOConfig(eps=1e-3, lr=2e-4, n_drop=1, backend="scan")
 ckpt = tempfile.mkdtemp(prefix="lezo_ckpt_")
+BASE = api.with_overrides(api.preset("tiny-smoke"), {
+    "model.seq_len": 48, "optimizer.lr": 2e-4,
+    "run.steps": 60, "run.batch_size": 8,
+    "run.eval_every": 0, "run.log_every": 0,
+})
 
 # uninterrupted run
-tr = Trainer(mcfg, task, TrainConfig(steps=60, batch_size=8, eval_every=0,
-                                     log_every=0), zo_cfg=zcfg)
-h_full = tr.train()
+h_full = api.run(BASE)["history"]
 
 # run that checkpoints every 20 steps, "crashes" at 30, resumes
-tcfg = TrainConfig(steps=30, batch_size=8, eval_every=0, log_every=0,
-                   ckpt_dir=ckpt, ckpt_every=20)
-Trainer(mcfg, task, tcfg, zo_cfg=zcfg).train()          # dies at step 30
-tcfg2 = TrainConfig(steps=60, batch_size=8, eval_every=0, log_every=0,
-                    ckpt_dir=ckpt, ckpt_every=20)
-h_resumed = Trainer(mcfg, task, tcfg2, zo_cfg=zcfg).train()
+CKPT = {"run.ckpt_dir": ckpt, "run.ckpt_every": 20}
+api.run(api.with_overrides(BASE, {**CKPT, "run.steps": 30}))  # dies at 30
+h_resumed = api.run(api.with_overrides(BASE, CKPT))["history"]
 
 diff = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
            for a, b in zip(jax.tree.leaves(h_full["final_params"]),
@@ -42,10 +38,9 @@ print(f"max |uninterrupted - crash/resume| over all params: {diff:.2e}")
 assert diff < 1e-5, "resume must reproduce the exact update stream"
 
 # straggler quorum: 1 of 4 loss shards dropped per step
-trq = Trainer(mcfg, task, TrainConfig(steps=60, batch_size=16, eval_every=0,
-                                      log_every=30, n_loss_shards=4,
-                                      quorum=0.75), zo_cfg=zcfg)
-hq = trq.train()
+hq = api.run(api.with_overrides(BASE, {
+    "run.batch_size": 16, "run.log_every": 30,
+    "runtime.n_loss_shards": 4, "runtime.quorum": 0.75}))["history"]
 print("quorum=0.75 loss trace:", [round(x, 3) for x in hq["loss"]])
 shutil.rmtree(ckpt, ignore_errors=True)
 print("OK")

@@ -3,6 +3,10 @@ arch, and the lockstep prefill+decode loop on the families the engine
 does not cover (MoE+MLA, xLSTM) — see DESIGN.md §12.
 
 Run:  PYTHONPATH=src python examples/serve_demo.py
+
+Everything flows through the unified experiment spec (DESIGN.md §11):
+the model config comes from ``api.derive(spec)`` and the engine is
+built straight from the spec's ``serving`` section.
 """
 import sys, pathlib
 sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
@@ -11,16 +15,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import api, configs, serving
+from repro import api, serving
 from repro.launch.serve import generate
 from repro.models import lm
 
 # -- paged engine: mixed-length requests share one KV arena
-cfg = configs.get("internlm2-1.8b", "smoke")
+spec = api.with_overrides(api.preset("default"), {
+    "model.arch": "internlm2-1.8b", "model.variant": "smoke",
+    "serving.page_size": 4, "serving.n_pages": 32, "serving.max_lanes": 2,
+    "serving.prefill_chunk": 8, "serving.max_seq": 64,
+})
+cfg = api.derive(spec).model_cfg
 params = lm.init_params(cfg, jax.random.PRNGKey(0))
 rng = np.random.default_rng(0)
-engine = serving.Engine(cfg, params, api.Serving(
-    page_size=4, n_pages=32, max_lanes=2, prefill_chunk=8, max_seq=64))
+engine = serving.Engine(cfg, params, spec.serving)
 reqs = [serving.Request(rid=i, tokens=rng.integers(0, cfg.vocab, n).tolist(),
                         max_new_tokens=g, seed=i)
         for i, (n, g) in enumerate([(24, 8), (9, 4), (17, 6)])]
@@ -30,7 +38,8 @@ for r in sorted(engine.run(reqs), key=lambda r: r.rid):
 
 # -- lockstep loop: the fallback path for non-attn mixers
 for arch in ["deepseek-v2-lite-16b", "xlstm-350m"]:
-    cfg = configs.get(arch, "smoke")
+    cfg = api.derive(api.with_overrides(
+        spec, {"model.arch": arch})).model_cfg
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     toks = jnp.asarray(np.random.default_rng(0).integers(
         0, cfg.vocab, (2, 24)), jnp.int32)

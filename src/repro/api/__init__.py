@@ -25,10 +25,11 @@ load lazily since they pull the full training stack.
 from repro.api import presets, validate as _validate_mod
 from repro.api.presets import PRESETS
 from repro.api.spec import (Experiment, Estimator, Model, Optimizer, Run,
-                            Runtime, Serving, SpecError, Task, Telemetry,
-                            UnknownTaskError, check_resume_spec, coerce,
-                            field_of, field_paths, from_dict, from_json,
-                            spec_diff, to_dict, to_json, with_overrides)
+                            Runtime, Serving, SpecError, Swarm, Task,
+                            Telemetry, UnknownTaskError, check_resume_spec,
+                            coerce, field_of, field_paths, from_dict,
+                            from_json, spec_diff, to_dict, to_json,
+                            with_overrides)
 
 validate = _validate_mod.validate
 
@@ -36,8 +37,8 @@ _LAZY = ("run", "evaluate", "dryrun", "dryrun_cell", "sweep", "derive",
          "preset", "Derived")
 
 __all__ = ["Experiment", "Estimator", "Model", "Optimizer", "PRESETS",
-           "Run", "Runtime", "Serving", "SpecError", "Task", "Telemetry",
-           "UnknownTaskError",
+           "Run", "Runtime", "Serving", "SpecError", "Swarm", "Task",
+           "Telemetry", "UnknownTaskError",
            "check_resume_spec", "coerce", "field_of", "field_paths",
            "from_dict", "from_json", "presets", "spec_diff", "to_dict",
            "to_json", "validate", "with_overrides", *_LAZY]

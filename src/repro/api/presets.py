@@ -9,7 +9,7 @@ import dataclasses
 from typing import Dict
 
 from repro.api.spec import (Experiment, Estimator, Model, Optimizer, Run,
-                            Runtime, SpecError)
+                            Runtime, SpecError, Swarm)
 
 # The paper's headline recipe at CPU-runnable scale: LeZO (75% of layers
 # dropped per step) + two-point SPSA on the OPT stack.  This preset IS
@@ -53,6 +53,12 @@ PRESETS: Dict[str, Experiment] = {
     "tiny-smoke": Experiment(
         model=Model(arch="opt-13b", variant="tiny", seq_len=32),
         run=Run(steps=8, batch_size=8, eval_every=0, log_every=1)),
+    # CI swarm-smoke: 2 local workers on the tiny model, enough steps
+    # to cross a checkpoint so crash/rejoin is exercised (DESIGN.md §14)
+    "swarm-smoke": Experiment(
+        model=Model(arch="opt-13b", variant="tiny", seq_len=32),
+        swarm=Swarm(workers=2),
+        run=Run(steps=12, batch_size=8, eval_every=0, log_every=1)),
 }
 
 

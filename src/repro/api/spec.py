@@ -14,6 +14,7 @@ Sections:
   * ``optimizer`` — the step recipe: mode, eps, lr, sparsity, policy
   * ``estimator`` — ZO gradient estimator and its direction budget
   * ``runtime``   — kernel/forward backends, mesh, quorum, PEFT
+  * ``swarm``     — multi-process scalar-sync topology (DESIGN.md §14)
   * ``run``       — steps, batch, seed, eval cadence, checkpoint policy
 
 Serialization is byte-stable: ``from_json(to_json(s))`` round-trips and
@@ -106,6 +107,34 @@ class Runtime:
 
 
 @dataclasses.dataclass(frozen=True)
+class Swarm:
+    """Seed-synchronized multi-process data-parallel ZO (DESIGN.md §14).
+
+    ``workers > 0`` (or an explicit ``n_shards``) switches the step to
+    the decomposed sharded execution path (``repro.swarm.shardstep``):
+    the global batch splits into ``n_shards`` fixed loss shards, each
+    shard's ±εz probe losses are evaluated independently, and the commit
+    reduces them host-side in fixed shard order — so the committed step
+    is bit-identical whether 1, 2 or 4 processes evaluated the shards.
+    ``launch swarm`` runs the real coordinator + worker processes; a
+    plain ``launch train`` on the same spec runs the identical sharded
+    step in one process.  The ``chaos_*`` schedule deterministically
+    injects transport faults for straggler / crash / partition testing.
+    """
+    workers: int = 0              # worker processes; 0 = swarm off
+    n_shards: int = 0             # loss shards per step; 0 = auto (=workers)
+    quorum: float = 1.0           # commit at >= round(quorum*n_shards) shards
+    step_deadline_s: float = 5.0  # straggler deadline before quorum fallback
+    host: str = "127.0.0.1"
+    port: int = 0                 # coordinator TCP port; 0 = ephemeral
+    chaos_seed: int = 0           # seeds the deterministic fault schedule
+    chaos_drop: float = 0.0      # P(drop) per contribution/commit message
+    chaos_delay_ms: float = 0.0  # injected delay upper bound per message
+    chaos_crash: str = ""        # "worker:step[,...]" hard-exit points
+    chaos_partition: str = ""    # "worker:start-end[,...]" drop-all windows
+
+
+@dataclasses.dataclass(frozen=True)
 class Serving:
     """Continuous-batching inference engine knobs (DESIGN.md §12).
     Pages are the cache allocation unit; buckets (``max_lanes`` decode
@@ -169,6 +198,7 @@ class Experiment:
     optimizer: Optimizer = Optimizer()
     estimator: Estimator = Estimator()
     runtime: Runtime = Runtime()
+    swarm: Swarm = Swarm()
     serving: Serving = Serving()
     telemetry: Telemetry = Telemetry()
     run: Run = Run()
@@ -176,8 +206,8 @@ class Experiment:
 
 SECTIONS: Dict[str, type] = {
     "model": Model, "task": Task, "optimizer": Optimizer,
-    "estimator": Estimator, "runtime": Runtime, "serving": Serving,
-    "telemetry": Telemetry, "run": Run,
+    "estimator": Estimator, "runtime": Runtime, "swarm": Swarm,
+    "serving": Serving, "telemetry": Telemetry, "run": Run,
 }
 
 # Fields a resumed run may legitimately change relative to the spec
@@ -189,6 +219,12 @@ SECTIONS: Dict[str, type] = {
 RESUME_MUTABLE = frozenset({
     "run.steps", "run.eval_every", "run.log_every",
     "run.ckpt_dir", "run.ckpt_every", "run.keep_ckpts",
+    # swarm topology/transport knobs a resumed run may move freely —
+    # the committed bits depend only on (n_shards, quorum, workers when
+    # n_shards is auto), which therefore stay recipe fields
+    "swarm.step_deadline_s", "swarm.host", "swarm.port",
+    "swarm.chaos_seed", "swarm.chaos_drop", "swarm.chaos_delay_ms",
+    "swarm.chaos_crash", "swarm.chaos_partition",
 }) | {f"serving.{f.name}" for f in dataclasses.fields(Serving)} \
   | {f"telemetry.{f.name}" for f in dataclasses.fields(Telemetry)}
 

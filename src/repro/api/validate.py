@@ -59,9 +59,10 @@ def validate(spec: Experiment):
     # deferred so validate stays jax-free until a spec actually needs it
     from repro.estimators import costs
 
-    m, t, o, e, rt, sv, tel, r = (spec.model, spec.task, spec.optimizer,
-                                  spec.estimator, spec.runtime,
-                                  spec.serving, spec.telemetry, spec.run)
+    m, t, o, e, rt, sw, sv, tel, r = (spec.model, spec.task, spec.optimizer,
+                                      spec.estimator, spec.runtime,
+                                      spec.swarm, spec.serving,
+                                      spec.telemetry, spec.run)
     mcfg = resolve_model(spec)
 
     _require(m.seq_len >= 2, "model.seq_len", f"must be >= 2, got {m.seq_len}")
@@ -235,7 +236,72 @@ def validate(spec: Experiment):
                  "required when run.ckpt_every > 0")
     _require(r.keep_ckpts >= 1, "run.keep_ckpts",
              f"must be >= 1, got {r.keep_ckpts}")
+
+    # swarm node (DESIGN.md §14): the scalar-sync topology must close
+    # before any process is spawned — a worker that dies on a bad spec
+    # after attach is a much worse failure mode than a SpecError here
+    from repro.swarm import chaos as chaos_mod  # stdlib-only, kept lazy
+
+    _require(sw.workers >= 0, "swarm.workers",
+             f"must be >= 0 (0 = swarm off), got {sw.workers}")
+    _require(sw.n_shards >= 0, "swarm.n_shards",
+             f"must be >= 0 (0 = auto: one shard per worker), "
+             f"got {sw.n_shards}")
+    _require(0.0 < sw.quorum <= 1.0, "swarm.quorum",
+             f"must be in (0, 1], got {sw.quorum}")
+    _require(sw.step_deadline_s > 0, "swarm.step_deadline_s",
+             f"must be > 0, got {sw.step_deadline_s}")
+    _require(0 <= sw.port <= 65535, "swarm.port",
+             f"must be a TCP port in [0, 65535] (0 = ephemeral), "
+             f"got {sw.port}")
+    _require(0.0 <= sw.chaos_drop < 1.0, "swarm.chaos_drop",
+             f"must be in [0, 1) — dropping every message forever "
+             f"deadlocks the run, got {sw.chaos_drop}")
+    _require(sw.chaos_delay_ms >= 0, "swarm.chaos_delay_ms",
+             f"must be >= 0, got {sw.chaos_delay_ms}")
+    try:
+        chaos_mod.parse_crashes(sw.chaos_crash)
+    except ValueError as ex:
+        raise SpecError("swarm.chaos_crash", str(ex)) from None
+    try:
+        chaos_mod.parse_partitions(sw.chaos_partition)
+    except ValueError as ex:
+        raise SpecError("swarm.chaos_partition", str(ex)) from None
+
+    if swarm_active(spec):
+        shards = swarm_shards(spec)
+        _require(o.mode == "zo", "optimizer.mode",
+                 "the swarm StepCommit carries one projected-gradient "
+                 "scalar — mode='zo' only (momentum/fo state cannot be "
+                 "reconstructed from the (seed, g) log)")
+        _require(e.name == "two_point", "estimator.name",
+                 "swarm shard contributions are (l+, l-) pairs reduced "
+                 "to a single g — estimator='two_point' only")
+        _require(rt.n_loss_shards == 1, "runtime.n_loss_shards",
+                 "the swarm shards the loss itself (swarm.n_shards); "
+                 "disable the in-trainer quorum simulation")
+        _require(r.batch_size % shards == 0, "run.batch_size",
+                 f"must divide into the swarm's {shards} loss shards, "
+                 f"got {r.batch_size}")
+        _require(sw.workers <= shards, "swarm.workers",
+                 f"more workers than loss shards would leave "
+                 f"{sw.workers - shards} workers permanently idle; "
+                 f"raise swarm.n_shards (= {shards}) or drop workers")
     return mcfg
+
+
+def swarm_active(spec: Experiment) -> bool:
+    """True when the spec selects the decomposed sharded step
+    (``repro.swarm.shardstep``) — any workers, or explicit shards."""
+    return spec.swarm.workers > 0 or spec.swarm.n_shards > 0
+
+
+def swarm_shards(spec: Experiment) -> int:
+    """Resolved loss-shard count: explicit ``swarm.n_shards`` wins, else
+    one shard per worker.  Fixed by the spec — NOT by how many processes
+    actually show up — so commits are worker-count-invariant."""
+    sw = spec.swarm
+    return sw.n_shards if sw.n_shards > 0 else max(sw.workers, 1)
 
 
 def n_drop_for(spec: Experiment, num_layers: int) -> int:

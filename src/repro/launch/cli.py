@@ -366,6 +366,35 @@ def _cmd_replay(ns):
     return rep
 
 
+def _cmd_swarm(ns):
+    from repro.obs import runlog
+    from repro.swarm import driver
+
+    if ns.attach:
+        result = driver.run_attached(ns.attach)
+        print(json.dumps(result, indent=1))
+        return result
+    # like train: every coordinator writes a run directory by default —
+    # the (seed, g) log is both the recovery substrate and the replay
+    # evidence, so a swarm without one defeats the point
+    implied = {}
+    flags = getattr(ns, _SPEC_DEST, None) or {}
+    user_set = {kv.partition("=")[0] for kv in ns.set}
+    if (not ns.no_runlog and "telemetry.runs_dir" not in flags
+            and "telemetry.runs_dir" not in user_set):
+        implied["telemetry.runs_dir"] = runlog.DEFAULT_RUNS_DIR
+    if ("swarm.workers" not in flags and "swarm.workers" not in user_set
+            and "swarm.n_shards" not in flags
+            and "swarm.n_shards" not in user_set):
+        implied["swarm.workers"] = 2
+    spec = build_spec(ns, implied)
+    summary = driver.run_swarm(spec, respawn=not ns.no_respawn)
+    print(json.dumps(summary, indent=1))
+    if ns.out:
+        _write_json(ns.out, {"spec": api.to_dict(spec), "summary": summary})
+    return summary
+
+
 def _cmd_specs(ns):
     os.makedirs(ns.out, exist_ok=True)
     written = {}
@@ -431,6 +460,17 @@ def _add_extras(cmd: str, ap: argparse.ArgumentParser):
                         help="auto: continuous-batching engine when the "
                              "arch supports it (attn mixers), else the "
                              "legacy lockstep loop")
+    elif cmd == "swarm":
+        ap.add_argument("--attach", default=None, metavar="HOST:PORT",
+                        help="join an existing swarm as a worker instead "
+                             "of starting a coordinator (the spec ships "
+                             "over the wire)")
+        ap.add_argument("--no-respawn", action="store_true",
+                        help="do not respawn workers that die mid-run")
+        ap.add_argument("--no-runlog", action="store_true",
+                        help="do not write a run directory")
+        ap.add_argument("--out", default=None,
+                        help="write the summary JSON here")
     elif cmd == "specs":
         ap.add_argument("--out", default="artifacts/specs",
                         help="dump every preset spec JSON here")
@@ -456,8 +496,8 @@ def _add_extras(cmd: str, ap: argparse.ArgumentParser):
 
 COMMANDS = {
     "train": _cmd_train, "evaluate": _cmd_evaluate, "dryrun": _cmd_dryrun,
-    "hillclimb": _cmd_hillclimb, "serve": _cmd_serve, "specs": _cmd_specs,
-    "report": _cmd_report, "replay": _cmd_replay,
+    "hillclimb": _cmd_hillclimb, "serve": _cmd_serve, "swarm": _cmd_swarm,
+    "specs": _cmd_specs, "report": _cmd_report, "replay": _cmd_replay,
 }
 
 

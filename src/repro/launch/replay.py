@@ -85,6 +85,33 @@ def _compare_row(t: int, row: Dict, metrics: Dict,
         if rec_n != new_n:
             failures.append(f"step {t} active_layers: recorded {rec_n} != "
                             f"re-executed {new_n}")
+    # swarm rows (DESIGN.md §14): the quorum mask and the per-shard ±εz
+    # losses the commit was reduced over — a degraded step replays with
+    # the recorded mask, so the shard sets match exactly
+    if "arrived" in row and "arrived" in metrics:
+        rec = np.asarray(row["arrived"], np.int32)
+        new = np.asarray(metrics["arrived"], np.int32)
+        matched["arrived"] = new.tolist()
+        if not np.array_equal(rec, new):
+            failures.append(f"step {t} arrived: recorded {rec.tolist()!r}"
+                            f" != re-executed {new.tolist()!r}")
+    if "shard_losses" in row and "shard_losses" in metrics:
+        rec_sl = {str(kk): _f32(v) for kk, v in row["shard_losses"].items()}
+        new_sl = {str(kk): _f32(v)
+                  for kk, v in metrics["shard_losses"].items()}
+        matched["shard_losses"] = {kk: [float(x) for x in v]
+                                   for kk, v in new_sl.items()}
+        if sorted(rec_sl) != sorted(new_sl):
+            failures.append(
+                f"step {t} shard_losses: recorded shards "
+                f"{sorted(rec_sl)} != re-executed {sorted(new_sl)}")
+        else:
+            for kk in sorted(rec_sl):
+                if not np.array_equal(rec_sl[kk], new_sl[kk]):
+                    failures.append(
+                        f"step {t} shard_losses[{kk}]: recorded "
+                        f"{rec_sl[kk].tolist()!r} != re-executed "
+                        f"{new_sl[kk].tolist()!r}")
     return matched
 
 
@@ -189,8 +216,15 @@ def replay_run(run: Optional[str] = None, step: Optional[int] = None,
             done = True
             break
         batch = trainer._model_batch(np_batch)
-        params, state, metrics = trainer._step(
-            params, state, batch, jnp.int32(t), jnp.uint32(base_seed))
+        if getattr(trainer._step, "sharded", False):
+            # swarm runs re-execute with the recorded quorum mask, so a
+            # short-handed commit reduces the very same shard subset
+            params, state, metrics = trainer._step(
+                params, state, batch, jnp.int32(t), jnp.uint32(base_seed),
+                arrived=rows[t].get("arrived"))
+        else:
+            params, state, metrics = trainer._step(
+                params, state, batch, jnp.int32(t), jnp.uint32(base_seed))
         matched = _compare_row(t, rows[t], jax.device_get(metrics), failures)
         # a checkpoint inside the replayed range pins the parameter bits
         if (t + 1) in ckpt_steps and (t + 1) <= k:

@@ -39,7 +39,10 @@ from typing import Any, Dict, List, Optional
 
 # Step-metric keys the accumulator snapshots when present.
 SCALAR_KEYS = ("loss", "projected_grad", "eps", "lr", "active_layers")
-VECTOR_KEYS = ("probe_grads", "coeffs", "n_active_params", "layer_sel")
+VECTOR_KEYS = ("probe_grads", "coeffs", "n_active_params", "layer_sel",
+               "arrived")
+# swarm shard rows (DESIGN.md §14): {shard: [l+, l-]} for arrived shards
+DICT_KEYS = ("shard_losses",)
 
 
 def _to_float_list(v) -> List[float]:
@@ -65,6 +68,9 @@ class HealthAccumulator:
         self.layer_counts = [0] * self.num_layers
         self.layer_last = [-1] * self.num_layers
         self.last_step = -1
+        # swarm quorum accounting: steps that committed short-handed
+        self.sharded_steps = 0
+        self.straggler_steps = 0
 
     # ----------------------------------------------------------- record
     def record(self, step: int, metrics: Dict[str, Any],
@@ -72,7 +78,8 @@ class HealthAccumulator:
         """Buffer the step's device values.  Never syncs: the values are
         fetched in one transfer at the next :meth:`drain`."""
         keep = {k: metrics[k]
-                for k in SCALAR_KEYS + VECTOR_KEYS if k in metrics}
+                for k in SCALAR_KEYS + VECTOR_KEYS + DICT_KEYS
+                if k in metrics}
         self._pending.append((int(step), seed, keep))
 
     def __len__(self):
@@ -99,6 +106,12 @@ class HealthAccumulator:
                     row[k] = _to_float_list(vals[k])
             if "layer_sel" in vals:
                 row["layer_sel"] = [int(x) for x in vals["layer_sel"]]
+            if "arrived" in vals:
+                row["arrived"] = [int(x) for x in vals["arrived"]]
+            if "shard_losses" in vals:
+                row["shard_losses"] = {
+                    str(k): [float(x) for x in v]
+                    for k, v in vals["shard_losses"].items()}
             if "active_layers" in row:
                 row["active_layers"] = int(row["active_layers"])
             self._aggregate(row)
@@ -118,6 +131,11 @@ class HealthAccumulator:
             self.g_m2 += d * (g - self.g_mean)
             row["g_mean"] = self.g_mean
             row["g_var"] = self.g_var
+        arrived = row.get("arrived")
+        if arrived is not None:
+            self.sharded_steps += 1
+            if any(a == 0 for a in arrived):
+                self.straggler_steps += 1
         sel = row.get("layer_sel")
         if sel is not None and len(sel) == self.num_layers:
             for i, n in enumerate(sel):
@@ -168,4 +186,7 @@ class HealthAccumulator:
                  if "update_norm_est" in r]
         if norms:
             out["update_norm_est_last"] = norms[-1]
+        if self.sharded_steps:
+            out["sharded_steps"] = self.sharded_steps
+            out["straggler_steps"] = self.straggler_steps
         return out

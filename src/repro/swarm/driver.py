@@ -1,0 +1,111 @@
+"""Swarm process driver: spawn, supervise, respawn (DESIGN.md §14).
+
+``run_swarm(spec)`` runs the coordinator in-process and launches
+``swarm.workers`` local worker processes (``python -m repro.launch
+swarm --attach host:port``).  A supervisor thread watches them: a
+worker that dies mid-run — injected ``chaos_crash`` or otherwise — is
+respawned (unless ``respawn=False``), and the replacement demonstrates
+the elastic-join path: it attaches with nothing but the address,
+rebuilds from the wire-shipped spec, and folds the committed
+``(seed, g)`` log forward to the live step.
+
+``attach`` mode is the worker half: connect to an existing coordinator
+and serve until the run completes.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+_MAX_RESPAWNS_PER_SLOT = 3
+
+
+def _src_root() -> str:
+    import repro
+    # namespace package: __file__ is None, __path__ still points at src/repro
+    pkg_dir = (os.path.dirname(repro.__file__) if repro.__file__
+               else list(repro.__path__)[0])
+    return os.path.dirname(os.path.abspath(pkg_dir))
+
+
+def _worker_cmd(host: str, port: int) -> List[str]:
+    return [sys.executable, "-m", "repro.launch", "swarm",
+            "--attach", f"{host}:{port}"]
+
+
+def _worker_env() -> Dict[str, str]:
+    env = dict(os.environ)
+    src = _src_root()
+    prev = env.get("PYTHONPATH", "")
+    if src not in prev.split(os.pathsep):
+        env["PYTHONPATH"] = src + (os.pathsep + prev if prev else "")
+    return env
+
+
+def spawn_worker(host: str, port: int) -> subprocess.Popen:
+    return subprocess.Popen(_worker_cmd(host, port), env=_worker_env())
+
+
+def run_swarm(spec, *, respawn: bool = True,
+              runs_root: Optional[str] = None) -> Dict[str, Any]:
+    """Coordinator + ``spec.swarm.workers`` supervised local workers.
+
+    Returns the coordinator's summary dict (run_id, epochs, straggler
+    steps, wire bytes/step, worker exit codes).
+    """
+    from repro.swarm.coordinator import Coordinator
+
+    if spec.swarm.workers < 1:
+        raise ValueError("run_swarm needs swarm.workers >= 1 "
+                         "(use --attach to join an existing swarm)")
+    coord = Coordinator(spec, runs_root=runs_root)
+    procs: List[Optional[subprocess.Popen]] = []
+    respawns = [0] * spec.swarm.workers
+    exits: List[int] = []
+    done = threading.Event()
+
+    def supervise():
+        while not done.is_set():
+            for slot, p in enumerate(procs):
+                if p is None or p.poll() is None:
+                    continue
+                exits.append(p.returncode)
+                procs[slot] = None
+                if (respawn and not done.is_set()
+                        and respawns[slot] < _MAX_RESPAWNS_PER_SLOT):
+                    respawns[slot] += 1
+                    procs[slot] = spawn_worker(coord.host, coord.port)
+            time.sleep(0.1)
+
+    sup = threading.Thread(target=supervise, daemon=True)
+    try:
+        for _ in range(spec.swarm.workers):
+            procs.append(spawn_worker(coord.host, coord.port))
+        sup.start()
+        summary = coord.serve()
+    finally:
+        done.set()
+        if sup.is_alive():
+            sup.join(timeout=2.0)
+        for p in procs:
+            if p is None:
+                continue
+            try:
+                p.wait(timeout=15.0)
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait(timeout=5.0)
+            exits.append(p.returncode)
+    summary["worker_exits"] = exits
+    summary["respawns"] = sum(respawns)
+    return summary
+
+
+def run_attached(address: str) -> Dict[str, Any]:
+    """Worker half of ``launch swarm``: join the swarm at ``address``."""
+    from repro.swarm import worker
+    return worker.attach(address)

@@ -226,6 +226,24 @@ class Trainer:
 
     # ------------------------------------------------------------- step
     def _build_step(self):
+        if self.experiment is not None:
+            import importlib
+            # repro.api binds the name "validate" to the function; the
+            # module itself has to come from importlib
+            api_validate = importlib.import_module("repro.api.validate")
+            if api_validate.swarm_active(self.experiment):
+                # swarm spec (DESIGN.md §14): run the decomposed sharded
+                # step — the same probe/reduce/commit programs a swarm
+                # worker runs, so a lone process and an N-worker swarm
+                # commit bit-identical steps on this spec.  Stateless
+                # (est_state == {}), so replay's ckpt fast-forward works.
+                from repro.swarm import shardstep
+                self._step = shardstep.from_trainer(
+                    self, api_validate.swarm_shards(self.experiment))
+                self.est_state = {}
+                self.fo_state = None
+                self._eval_loss = jax.jit(self.loss_fn)
+                return
         if self.tcfg.mode == "zo":
             step, init = estimators.make_step(self.loss_fn, self.spec,
                                               self.est_cfg)

@@ -127,4 +127,8 @@ SLOW_NODE_PATTERNS = [
     "test_engine_sampling_reproducible_across_batch_composition",
     "tests/test_serving.py::test_engine_bit_identical_on_rope_arch",
     "tests/test_serving.py::test_engine_eos_stops_early_and_frees_pages",
+    # -- swarm (tests/test_swarm.py): the subprocess e2e runs carry
+    #    @pytest.mark.slow directly (slow by design: each spawns 2-3
+    #    worker processes for ~30-40s); the protocol/commit/chaos/spec
+    #    property tests all stay tier-1 (<1s total)
 ]
