@@ -17,6 +17,14 @@ acceptance target is engine >= 2x lockstep request throughput
 ``--check`` enforces the MIN_SPEEDUP regression tripwire (1.5x, below
 which continuous batching is broken, with headroom for noisy CI boxes)
 and ``make bench-smoke`` runs with it.
+
+Two prefix-sharing scenarios ride along (DESIGN.md §12): a
+shared-system-prompt convoy run twice — ``prefix_cache`` off then on —
+and a zipfian repeat workload.  The JSON carries page_hit_rate,
+cow_copies, and the on/off wall-time ratio; ``--check`` additionally
+trips when the convoy hit rate drops below MIN_HIT_RATE, when sharing
+runs slower than not sharing, or when a drained engine leaks pages the
+trie does not account for.
 """
 from __future__ import annotations
 
@@ -39,6 +47,14 @@ from repro.models import lm  # noqa: E402
 LONG_GEN, SHORT_GENS = 64, (2, 4, 6)
 PROMPT_RANGE = (4, 16)
 MIN_SPEEDUP = 1.5     # --check tripwire; the acceptance target is 2x
+
+# --- prefix-sharing scenario (DESIGN.md §12) -------------------------
+SYS_LEN = 40          # shared system prompt: 5 full pages — NOT chunk-
+                      # aligned, so the re-run chunk COWs its last page
+TAIL_RANGE = (2, 9)   # per-request unique suffix
+SHARE_GENS = (3, 4, 5)
+MIN_HIT_RATE = 0.5    # --check: shared-convoy page hit rate floor
+MIN_SHARE_RATIO = 1.0  # --check: sharing-on must not run slower than off
 
 
 def make_traffic(rng, n_requests, lanes, vocab, long_gen, short_gens):
@@ -89,6 +105,65 @@ def make_lockstep(cfg, params, lanes, prompt_bucket, max_seq):
     return serve
 
 
+def make_shared_traffic(rng, n_requests, vocab):
+    """Shared-system-prompt convoy: every request opens with the same
+    SYS_LEN tokens (the per-tenant prompt shape) plus a short unique
+    tail — the workload prefix caching exists for."""
+    system = rng.integers(0, vocab, SYS_LEN).tolist()
+    return [serving.Request(
+        rid=rid,
+        tokens=system + rng.integers(
+            0, vocab, int(rng.integers(*TAIL_RANGE))).tolist(),
+        max_new_tokens=int(SHARE_GENS[rid % len(SHARE_GENS)]), seed=rid)
+        for rid in range(n_requests)]
+
+
+def make_zipf_traffic(rng, n_requests, vocab, n_prompts=6):
+    """Zipf-distributed repeats over a small prompt population —
+    realistic cache-hit structure without a designed shared prefix."""
+    population = [rng.integers(0, vocab,
+                               int(rng.integers(16, 41))).tolist()
+                  for _ in range(n_prompts)]
+    ranks = np.minimum(rng.zipf(1.3, size=n_requests) - 1, n_prompts - 1)
+    return [serving.Request(rid=rid, tokens=population[int(k)],
+                            max_new_tokens=int(SHARE_GENS[rid % 3]),
+                            seed=rid)
+            for rid, k in enumerate(ranks)]
+
+
+def _serve_prefix(cfg, params, sv, reqs, prefix_cache):
+    """One engine pass over ``reqs``; returns (seconds, engine) with the
+    drain leak count asserted into the engine's scheduler."""
+    import dataclasses
+    engine = serving.Engine(cfg, params,
+                            dataclasses.replace(sv,
+                                                prefix_cache=prefix_cache))
+    warm = make_traffic(np.random.default_rng(1), sv.max_lanes,
+                        sv.max_lanes, cfg.vocab, 2, (2,))
+    engine.run(warm)
+    if prefix_cache:
+        # a same-prompt pair with a non-chunk-aligned prefix forces one
+        # COW, compiling the page-clone step outside the measured run
+        wrng = np.random.default_rng(2)
+        wsys = wrng.integers(0, cfg.vocab, SYS_LEN).tolist()
+        for i in range(2):      # sequential: second run hits, COWs
+            engine.run([serving.Request(rid=10 ** 6 + i,
+                                        tokens=wsys + [int(i)] * 3,
+                                        max_new_tokens=2, seed=i)])
+    sched = engine.sched
+    sched.prefix_hits = sched.prefix_lookups = 0     # report post-warm
+    sched.cow_copies = sched.trie_evictions = 0
+    t0 = time.perf_counter()
+    engine.run(reqs)
+    return time.perf_counter() - t0, engine
+
+
+def _leaked(engine):
+    """Pages still allocated after drain that the trie does not hold."""
+    trie = engine.sched.trie
+    return engine.pool.in_use - (trie.reclaimable() if trie else 0)
+
+
 def _pct(xs, q):
     return float(np.percentile(np.asarray(xs), q))
 
@@ -132,6 +207,21 @@ def run(smoke: bool = False, json_path=None, preset: str = "bench-smoke",
 
     dt_lock, lat_lock = lockstep(reqs)
 
+    # --- prefix-sharing scenarios (same spec, prefix_cache toggled) ---
+    share_rng = np.random.default_rng(spec.run.seed + 1)
+    shared = make_shared_traffic(share_rng, n_requests, cfg.vocab)
+    dt_off, eng_off = _serve_prefix(cfg, params, sv, shared, False)
+    dt_on, eng_on = _serve_prefix(cfg, params, sv, shared, True)
+    share_ratio = dt_off / dt_on
+    hit_rate = eng_on.sched.page_hit_rate
+    cow_copies = eng_on.sched.cow_copies
+    leaked = _leaked(eng_on) + _leaked(eng_off)
+    dt_zipf, eng_zipf = _serve_prefix(
+        cfg, params, sv, make_zipf_traffic(share_rng, n_requests,
+                                           cfg.vocab), True)
+    zipf_hit_rate = eng_zipf.sched.page_hit_rate
+    leaked += _leaked(eng_zipf)
+
     rps_e, rps_l = n_requests / dt_engine, n_requests / dt_lock
     speedup = rps_e / rps_l
     rows = common.emit([
@@ -145,6 +235,12 @@ def run(smoke: bool = False, json_path=None, preset: str = "bench-smoke",
         ("serving_lockstep_p50_ms", _pct(list(lat_lock.values()), 50) * 1e3,
          f"p99 {_pct(list(lat_lock.values()), 99) * 1e3:.0f} ms"),
         ("serving_speedup", 0.0, f"{speedup:.2f}x request throughput"),
+        ("serving_shared_prefix_on", dt_on * 1e6 / n_requests,
+         f"hit rate {hit_rate:.2f}, {cow_copies} COW copies"),
+        ("serving_shared_prefix_off", dt_off * 1e6 / n_requests,
+         f"{share_ratio:.2f}x from sharing"),
+        ("serving_zipf_hit_rate", 0.0,
+         f"{zipf_hit_rate:.2f} over zipf(1.3) repeats"),
     ])
     if json_path:
         common.write_json(json_path, {
@@ -162,16 +258,52 @@ def run(smoke: bool = False, json_path=None, preset: str = "bench-smoke",
                          "p50_s": _pct(list(lat_lock.values()), 50),
                          "p99_s": _pct(list(lat_lock.values()), 99)},
             "speedup": speedup,
-            "tripwires": {"serving_speedup": {
-                "ok": speedup >= MIN_SPEEDUP, "value": speedup,
-                "limit": MIN_SPEEDUP,
-                "note": "engine vs lockstep request throughput "
-                        "(continuous batching broken below this)"}},
+            "sharing": {"on_seconds": dt_on, "off_seconds": dt_off,
+                        "ratio": share_ratio,
+                        "page_hit_rate": hit_rate,
+                        "cow_copies": cow_copies,
+                        "trie_evictions": eng_on.sched.trie_evictions,
+                        "zipf_seconds": dt_zipf,
+                        "zipf_hit_rate": zipf_hit_rate,
+                        "leaked_pages": leaked,
+                        "sys_len": SYS_LEN, "tail_range": list(TAIL_RANGE)},
+            "tripwires": {
+                "serving_speedup": {
+                    "ok": speedup >= MIN_SPEEDUP, "value": speedup,
+                    "limit": MIN_SPEEDUP,
+                    "note": "engine vs lockstep request throughput "
+                            "(continuous batching broken below this)"},
+                "serving_page_hit_rate": {
+                    "ok": hit_rate >= MIN_HIT_RATE, "value": hit_rate,
+                    "limit": MIN_HIT_RATE,
+                    "note": "shared-system-prompt convoy: fraction of "
+                            "prompt pages served from the prefix trie"},
+                "serving_sharing_throughput": {
+                    "ok": share_ratio >= MIN_SHARE_RATIO,
+                    "value": share_ratio, "limit": MIN_SHARE_RATIO,
+                    "note": "sharing-on vs sharing-off wall time on the "
+                            "shared convoy (below 1.0 sharing costs more "
+                            "than it saves)"},
+                "serving_page_leaks": {
+                    "ok": leaked == 0, "value": leaked, "limit": 0,
+                    "note": "pages still allocated after drain that the "
+                            "prefix trie does not account for"}},
             "rows": common.rows_to_json(rows),
         }, spec=spec)
-    if check and speedup < MIN_SPEEDUP:
-        raise SystemExit(f"serving speedup regression: {speedup:.2f}x < "
-                         f"{MIN_SPEEDUP}x tripwire")
+    if check:
+        fails = []
+        if speedup < MIN_SPEEDUP:
+            fails.append(f"speedup {speedup:.2f}x < {MIN_SPEEDUP}x")
+        if hit_rate < MIN_HIT_RATE:
+            fails.append(f"page hit rate {hit_rate:.2f} < {MIN_HIT_RATE}")
+        if share_ratio < MIN_SHARE_RATIO:
+            fails.append(f"sharing ratio {share_ratio:.2f}x < "
+                         f"{MIN_SHARE_RATIO}x")
+        if leaked:
+            fails.append(f"{leaked} leaked pages after drain")
+        if fails:
+            raise SystemExit("serving tripwires failed: "
+                             + "; ".join(fails))
     return rows
 
 
@@ -182,8 +314,9 @@ def main():
                     help="write BENCH_serving.json here")
     ap.add_argument("--preset", default="bench-smoke")
     ap.add_argument("--check", action="store_true",
-                    help=f"exit nonzero when speedup < {MIN_SPEEDUP}x "
-                         "(the continuous-batching regression tripwire)")
+                    help=f"exit nonzero when speedup < {MIN_SPEEDUP}x, "
+                         f"convoy page hit rate < {MIN_HIT_RATE}, sharing "
+                         "runs slower than not sharing, or pages leak")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     run(smoke=args.smoke, json_path=args.json, preset=args.preset,

@@ -149,6 +149,10 @@ class Serving:
     temperature: float = 0.0      # 0 = greedy
     top_k: int = 0                # 0 = full-vocab sampling
     eos_id: Optional[int] = None  # None = stop on max_new_tokens only
+    # prefix-cache page sharing + preemptive scheduling (DESIGN.md §12)
+    prefix_cache: bool = False    # share full-page prompt prefixes (COW)
+    priorities: int = 1           # priority classes; FIFO within a class
+    preempt: bool = False         # evict lower-priority decoding lanes
 
 
 @dataclasses.dataclass(frozen=True)

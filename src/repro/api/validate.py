@@ -179,6 +179,13 @@ def validate(spec: Experiment):
              f"pool has {sv.n_pages - 1} usable pages (page 0 is trash) "
              f"but the smallest default-budget request needs {min_pages} "
              f"({min_span} slots at page_size={sv.page_size})")
+    _require(sv.priorities >= 1, "serving.priorities",
+             f"must be >= 1 priority classes, got {sv.priorities}")
+    if sv.preempt:
+        _require(sv.priorities >= 2, "serving.preempt",
+                 "preemption needs at least two priority classes "
+                 f"(serving.priorities={sv.priorities}) — equal-priority "
+                 "requests never evict each other")
     _require(sv.temperature >= 0.0, "serving.temperature",
              f"must be >= 0 (0 = greedy), got {sv.temperature}")
     _require(sv.top_k >= 0, "serving.top_k",

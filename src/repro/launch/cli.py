@@ -328,12 +328,22 @@ def _cmd_serve(ns):
               f"{engine.n_prefill_calls} prefill calls, "
               f"{engine.n_decode_steps} decode steps, "
               f"{engine.n_compiles()} compiles)")
+        sched = engine.sched
+        if spec.serving.prefix_cache or sched.preemptions:
+            print(f"sharing: page hit rate {sched.page_hit_rate:.2f} "
+                  f"({sched.prefix_hits}/{sched.prefix_lookups} pages), "
+                  f"{sched.cow_copies} COW copies, "
+                  f"{sched.trie_evictions} trie evictions, "
+                  f"{sched.preemptions} preemptions")
         print("sample:", np.asarray(out[0])[:12])
         return {"spec": api.to_dict(spec), "seconds": dt, "tokens": out,
                 "engine": {"mode": "paged",
                            "prefill_calls": engine.n_prefill_calls,
                            "decode_steps": engine.n_decode_steps,
-                           "compiles": engine.n_compiles()}}
+                           "compiles": engine.n_compiles(),
+                           "page_hit_rate": sched.page_hit_rate,
+                           "cow_copies": sched.cow_copies,
+                           "preemptions": sched.preemptions}}
 
     toks = jnp.asarray(tokens, jnp.int32)
     t0 = time.perf_counter()

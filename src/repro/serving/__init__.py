@@ -14,9 +14,10 @@ counter RNG.  ``python -m repro.launch serve`` is the CLI surface;
 """
 from repro.serving.engine import Engine, EngineUnsupported, GenResult
 from repro.serving.pool import KVPool, PoolExhausted, TRASH_PAGE
+from repro.serving.prefix import PrefixTrie
 from repro.serving.sampling import make_sampler
 from repro.serving.scheduler import Request, Scheduler
 
 __all__ = ["Engine", "EngineUnsupported", "GenResult", "KVPool",
-           "PoolExhausted", "Request", "Scheduler", "TRASH_PAGE",
-           "make_sampler"]
+           "PoolExhausted", "PrefixTrie", "Request", "Scheduler",
+           "TRASH_PAGE", "make_sampler"]

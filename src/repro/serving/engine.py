@@ -8,6 +8,16 @@ compiled shapes of the same ``lm.paged_step`` function:
   * the *prefill bucket*:  (1, prefill_chunk) tokens, one lane's row
   * the *decode bucket*:   (max_lanes, 1) tokens, the full page table
 
+(plus, when prefix sharing triggers a copy-on-write, one tiny
+page-duplication kernel — a scalar-indexed clone compiled once and
+outside the bucket promise ``n_compiles`` guards).  With
+``serving.prefix_cache`` on, prompts that share a full-page token
+prefix attach the same physical pages through the scheduler's radix
+trie and skip the chunk-aligned part of prefill; greedy output is
+bit-identical to sharing off (the correctness anchor pinned in
+tests/test_serving.py).  ``serving.preempt`` lets a starved
+higher-priority admission evict the lowest-priority decoding lane.
+
 Prompts are padded to the chunk bucket and streamed in chunk-by-chunk,
 interleaved with decode steps (one chunk per engine step), so a long
 admission never stalls the running lanes for more than one chunk's
@@ -87,7 +97,10 @@ class Engine:
         self.pool = KVPool(serving.n_pages, serving.page_size)
         self.sched = Scheduler(self.pool, max_lanes=serving.max_lanes,
                                prefill_chunk=serving.prefill_chunk,
-                               max_seq=max_seq)
+                               max_seq=max_seq,
+                               prefix_cache=serving.prefix_cache,
+                               priorities=serving.priorities,
+                               preempt=serving.preempt)
         self.arena = lm.init_paged_cache(cfg, serving.n_pages,
                                          serving.page_size)
         sample = sampling.make_sampler(serving.temperature, serving.top_k)
@@ -108,6 +121,12 @@ class Engine:
                                        jnp.zeros((B,), jnp.int32))
             nxt = sample(logits, seeds, pos + 1)
             return nxt[:, None], pos + 1, a2
+
+        def cstep(a, src, dst):
+            # copy-on-write page duplication: clone physical page src
+            # into dst across every stage-block leaf (page axis is 1)
+            return jax.tree_util.tree_map(
+                lambda x: x.at[:, dst].set(x[:, src]), a)
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.distributed import ctx, sharding
@@ -128,9 +147,13 @@ class Engine:
                                   in_shardings=(p_shard, a_shard, repl,
                                                 repl, repl, repl),
                                   out_shardings=(repl, repl, a_shard))
+            self._cstep = jax.jit(cstep, donate_argnums=(0,),
+                                  in_shardings=(a_shard, repl, repl),
+                                  out_shardings=a_shard)
         else:
             self._pstep = jax.jit(pstep, donate_argnums=(1,))
             self._dstep = jax.jit(dstep, donate_argnums=(1,))
+            self._cstep = jax.jit(cstep, donate_argnums=(0,))
         self.n_prefill_calls = 0
         self.n_decode_steps = 0
         self._t_submit: Dict[int, float] = {}
@@ -156,6 +179,13 @@ class Engine:
                                    "generated tokens over all requests")
         self._m_reqs = reg.counter("serving_requests_completed",
                                    "requests retired")
+        # prefix sharing / preemption (DESIGN.md §12)
+        self._m_hit = reg.gauge("serving_page_hit_rate",
+                                "shared prompt pages attached / looked up")
+        self._m_preempt = reg.gauge("serving_preemptions",
+                                    "decoding lanes evicted and requeued")
+        self._m_cow = reg.gauge("serving_cow_copies",
+                                "shared pages duplicated before a write")
 
     def _sample_gauges(self):
         self._m_queue.set(len(self.sched.queue))
@@ -165,6 +195,9 @@ class Engine:
         self._m_pages.set(in_use)
         usable = self.pool.n_pages - 1        # page 0 is the trash page
         self._m_util.set(in_use / usable if usable else 0.0)
+        self._m_hit.set(self.sched.page_hit_rate)
+        self._m_preempt.set(self.sched.preemptions)
+        self._m_cow.set(self.sched.cow_copies)
 
     def metrics_text(self) -> str:
         """Prometheus text exposition of the engine's metrics."""
@@ -192,8 +225,11 @@ class Engine:
         """One engine iteration: admit, one prefill chunk, one batched
         decode step.  Returns the requests that finished this iteration."""
         sched = self.sched
+        pre_preempt = sched.preemptions
         while sched.try_admit(now=self.clock()) is not None:
             pass
+        if sched.preemptions != pre_preempt:
+            self._decode_dirty = True    # a decoding lane was evicted
 
         # -- chunked prefill: one chunk for the oldest prefilling lane
         # (admission order, NOT lane index — a later admission into a
@@ -211,6 +247,12 @@ class Engine:
                     lane.req.tokens[start:lo], np.int32)
             final = start + c >= lane.padded_len
             sel = (min(lane.prompt_len - 1 - start, c - 1) if final else 0)
+            # copy-on-write: shared pages this chunk writes get a
+            # private duplicate before the write lands (scheduler swaps
+            # the page table; the device content copy happens here)
+            for src, dst in sched.cow_range(lane, start, start + c):
+                self.arena = self._cstep(self.arena, jnp.int32(src),
+                                         jnp.int32(dst))
             with self.obs.tracer.span(obs_mod.SERVE_PREFILL) as sp:
                 toks, self.arena = self._pstep(
                     self.params, self.arena, jnp.asarray(chunk),
@@ -225,6 +267,7 @@ class Engine:
             lane.next_chunk += 1
             lane.pos = min(start + c, lane.padded_len)
             if final:
+                sched.register_prefix(lane)   # full prompt pages -> trie
                 tok = int(toks[0])
                 lane.t_first = self.clock()
                 lane.out.append(tok)
@@ -308,10 +351,12 @@ class Engine:
         t_run = self.clock()
         while self.sched.busy:
             before = (self.n_prefill_calls, self.n_decode_steps,
-                      len(results), len(self.sched.queue))
+                      len(results), len(self.sched.queue),
+                      self.sched.preemptions)
             results.extend(self.step())
             after = (self.n_prefill_calls, self.n_decode_steps,
-                     len(results), len(self.sched.queue))
+                     len(results), len(self.sched.queue),
+                     self.sched.preemptions)
             guard = guard + 1 if before == after else 0
             if guard > 2:    # admission blocked with nothing running
                 raise RuntimeError(

@@ -1,0 +1,140 @@
+"""Stateful property suite for the refcounted KVPool (DESIGN.md §12).
+
+Random alloc/share/incref/decref/COW/free sequences are interpreted
+against the pool while a *shadow model* tracks every reference the test
+holds (a page appears in ``held`` once per reference).  After every
+single operation the suite asserts:
+
+  * ``check_invariants()`` never throws,
+  * ``available + in_use`` equals the usable page count,
+  * no page is simultaneously free and referenced,
+  * each allocated page's refcount equals the shadow model's count
+    (refcounts >= 1, never negative),
+
+and a full drain at the end returns every page.
+
+Two drivers share one interpreter: a hypothesis ``@given`` (via the
+optional-dependency shim in tests/_hyp.py) and a pure-random seeded
+fallback loop that runs regardless — the invariants stay machine-checked
+even in containers without hypothesis.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.serving import KVPool, PoolExhausted, TRASH_PAGE
+
+ALLOC, INCREF, DECREF, COW, FREE = range(5)
+
+
+def _check(pool: KVPool, held):
+    pool.check_invariants()
+    assert pool.available + pool.in_use == pool.n_pages - 1
+    counts = {}
+    for p in held:
+        counts[p] = counts.get(p, 0) + 1
+    assert pool.in_use == len(counts)
+    for p, n in counts.items():
+        assert p != TRASH_PAGE
+        assert pool.refcount(p) == n, \
+            f"page {p}: pool says rc={pool.refcount(p)}, model says {n}"
+
+
+def _interpret(pool: KVPool, ops):
+    """Run (op, a) pairs against ``pool``; ``held`` is the shadow
+    reference multiset (one entry per reference this test owns)."""
+    held = []
+    for op, a in ops:
+        if op == ALLOC:
+            n = a % 6
+            try:
+                held.extend(pool.alloc(n))
+            except PoolExhausted:
+                assert n > pool.available
+        elif op == INCREF and held:
+            p = held[a % len(held)]
+            pool.incref(p)
+            held.append(p)
+        elif op == DECREF and held:
+            p = held.pop(a % len(held))
+            freed = pool.decref(p)
+            assert freed == (p not in held)
+        elif op == COW and held:
+            i = a % len(held)
+            p = held[i]
+            try:
+                q, copied = pool.cow(p)
+            except PoolExhausted:
+                assert pool.available == 0 and pool.refcount(p) > 1
+            else:
+                assert copied == (q != p)
+                held[i] = q
+        elif op == FREE and held:
+            k = 1 + a % min(4, len(held))
+            batch, held = held[:k], held[k:]
+            pool.free(batch)
+        _check(pool, held)
+    # drain: every reference dropped returns every page to the free list
+    pool.free(held)
+    _check(pool, [])
+    assert pool.in_use == 0 and pool.available == pool.n_pages - 1
+
+
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 10 ** 6)),
+                max_size=120),
+       st.integers(2, 24))
+@settings(max_examples=80, deadline=None)
+def test_pool_refcount_trace_hypothesis(ops, n_pages):
+    _interpret(KVPool(n_pages=n_pages, page_size=4), ops)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_pool_refcount_trace_random_fallback(seed):
+    """The same interpreter on seeded numpy traces — runs with or
+    without hypothesis installed."""
+    rng = np.random.default_rng(seed)
+    n_pages = int(rng.integers(2, 25))
+    ops = [(int(rng.integers(0, 5)), int(rng.integers(0, 10 ** 6)))
+           for _ in range(200)]
+    _interpret(KVPool(n_pages=n_pages, page_size=4), ops)
+
+
+# ------------------------------------------------- targeted error paths
+def test_incref_decref_cow_of_unallocated_raise():
+    pool = KVPool(n_pages=6, page_size=4)
+    (p,) = pool.alloc(1)
+    pool.free([p])
+    with pytest.raises(ValueError, match="double-free|foreign"):
+        pool.decref(p)
+    with pytest.raises(ValueError, match="incref of unallocated"):
+        pool.incref(p)
+    with pytest.raises(ValueError, match="cow of unallocated"):
+        pool.cow(p)
+    with pytest.raises(ValueError, match="incref of unallocated"):
+        pool.incref(TRASH_PAGE)
+    pool.check_invariants()
+
+
+def test_cow_semantics():
+    pool = KVPool(n_pages=6, page_size=4)
+    (p,) = pool.alloc(1)
+    assert pool.cow(p) == (p, False)          # sole owner writes in place
+    pool.incref(p)                            # now shared
+    q, copied = pool.cow(p)
+    assert copied and q != p
+    assert pool.refcount(p) == 1 and pool.refcount(q) == 1
+    pool.free([p, q])
+    pool.check_invariants()
+
+
+def test_cow_exhausted_leaves_pool_untouched():
+    pool = KVPool(n_pages=3, page_size=4)
+    a, b = pool.alloc(2)                      # pool now empty
+    pool.incref(a)
+    with pytest.raises(PoolExhausted):
+        pool.cow(a)
+    assert pool.refcount(a) == 2 and pool.refcount(b) == 1
+    pool.decref(a)
+    pool.free([a, b])
+    pool.check_invariants()

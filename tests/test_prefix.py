@@ -1,0 +1,178 @@
+"""Prefix-trie regression suite (DESIGN.md §12, serving/prefix.py).
+
+Host-side only (no jax): insert/lookup, the partial-page boundary,
+token-exact matching (no hash-collision false shares), LRU leaf-first
+eviction under pool pressure, and a zipfian-prompt workload through the
+scheduler asserting page hits occur only on true token-prefix matches.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import KVPool, PrefixTrie, Request, Scheduler
+
+PS = 4
+
+
+def _trie(n_pages=64):
+    pool = KVPool(n_pages=n_pages, page_size=PS)
+    return pool, PrefixTrie(pool)
+
+
+# ------------------------------------------------------- insert / lookup
+def test_insert_then_match_returns_same_pages():
+    pool, trie = _trie()
+    pages = pool.alloc(3)
+    trie.insert(list(range(12)), pages)
+    assert [n.page for n in trie.match(list(range(12)))] == pages
+    # a longer prompt with the same prefix matches the full chain
+    assert [n.page for n in trie.match(list(range(12)) + [9, 9])] == pages
+    trie.check_invariants()
+    pool.check_invariants()
+
+
+def test_match_splits_at_partial_page():
+    """Only *full* pages share: the 10-token prompt contributes 2 trie
+    nodes, and a lookup diverging inside page 2 still matches them."""
+    pool, trie = _trie()
+    prompt = list(range(10))                 # 2 full pages + 2 spare slots
+    pages = pool.alloc(3)                    # lane owns 3, trie takes 2
+    trie.insert(prompt, pages)
+    assert trie.n_nodes == 2
+    assert pool.refcount(pages[0]) == 2 and pool.refcount(pages[1]) == 2
+    assert pool.refcount(pages[2]) == 1      # partial tail page never shared
+    assert [n.page for n in trie.match(prompt)] == pages[:2]
+    # divergence mid-page-2 (token 9 != 99): page 2 must not be offered
+    assert [n.page for n in trie.match(list(range(9)) + [99])] == pages[:2]
+    # divergence mid-page-1 kills the whole second edge
+    assert [n.page for n in trie.match([0, 1, 2, 3, 4, 99, 6, 7])] \
+        == pages[:1]
+    trie.check_invariants()
+
+
+def test_no_false_share_on_non_prefix():
+    """Matching is token-exact (dict keyed by the token tuple): a match
+    can only ever return nodes whose concatenated tokens are a true
+    prefix of the query — there is no hash-only comparison to collide."""
+    pool, trie = _trie()
+    a, b = pool.alloc(2), pool.alloc(2)
+    trie.insert([1, 2, 3, 4, 5, 6, 7, 8], a)
+    trie.insert([1, 2, 3, 4, 9, 9, 9, 9], b[:1] + b[1:])
+    # shared first page: second insert reuses the existing node
+    assert trie.n_nodes == 3
+    for query in ([8, 7, 6, 5], [1, 2, 3, 9], [2, 3, 4, 5, 6, 7, 8, 9]):
+        path = trie.match(query)
+        got = [t for n in path for t in n.tokens]
+        assert got == query[:len(got)], \
+            f"false share: {got} is not a prefix of {query}"
+    assert trie.match([1, 2, 3, 4, 5, 6, 7, 8])[-1].page == a[1]
+    assert trie.match([1, 2, 3, 4, 9, 9, 9, 9])[-1].page == b[1]
+    trie.check_invariants()
+
+
+def test_insert_keeps_first_writer_on_duplicate():
+    """Two lanes racing the same prompt: the second insert must not
+    replace the first chain's pages (peers may already read them)."""
+    pool, trie = _trie()
+    a, b = pool.alloc(2), pool.alloc(2)
+    trie.insert(list(range(8)), a)
+    trie.insert(list(range(8)), b)
+    assert [n.page for n in trie.match(list(range(8)))] == a
+    assert pool.refcount(b[0]) == 1 and pool.refcount(b[1]) == 1
+    trie.check_invariants()
+
+
+# ------------------------------------------------------------- eviction
+def test_evict_dead_leaves_first_lru():
+    pool, trie = _trie()
+    old = pool.alloc(3)
+    trie.insert(list(range(12)), old)
+    young = pool.alloc(2)
+    trie.insert([50, 51, 52, 53, 54, 55, 56, 57], young)
+    pool.free(old)
+    pool.free(young)                         # both chains now trie-only
+    # deepest + least-recently-used leaf goes first: old chain's tail
+    assert trie.reclaimable() == 5
+    assert trie.evict(1) == [old[2]]
+    # a fresh match refreshes the old chain; the young chain now ages out
+    trie.match(list(range(8)))
+    assert trie.evict(1) == [young[1]]
+    assert trie.evict(10) == [young[0], old[1], old[0]]
+    assert trie.n_nodes == 0 and pool.in_use == 0
+    trie.check_invariants()
+    pool.check_invariants()
+
+
+def test_evict_spares_live_and_kept_nodes():
+    pool, trie = _trie()
+    live = pool.alloc(2)                     # a lane still references these
+    trie.insert(list(range(8)), live)
+    dead = pool.alloc(1)
+    trie.insert([9, 9, 9, 9], dead)
+    pool.free(dead)
+    path = trie.match(list(range(8)))
+    keep = frozenset(id(n) for n in path)
+    # live chain (rc 2) is not reclaimable; dead one is unless kept
+    assert trie.reclaimable() == 1
+    assert trie.reclaimable(keep=frozenset(id(n) for n in
+                                           trie.match([9, 9, 9, 9]))) == 0
+    assert trie.evict(5, keep=keep) == dead
+    assert [n.page for n in trie.match(list(range(8)))] == live
+    trie.check_invariants()
+
+
+def test_eviction_under_pool_pressure_via_scheduler():
+    """Satellite regression (ISSUE 10): a pool whose free pages all sit
+    in dead trie chains must evict and admit, not raise/refuse."""
+    s = Scheduler(KVPool(n_pages=9, page_size=PS), max_lanes=2,
+                  prefill_chunk=8, max_seq=32, prefix_cache=True)
+    rng = np.random.default_rng(0)
+    # two dead 16-token prompts fill all 8 usable pages with trie-only
+    # references (register, then drop the lane's share)
+    for base in (100, 200):
+        pages = s.pool.alloc(4)
+        s.trie.insert(list(range(base, base + 16)), pages)
+        s.pool.free(pages)
+    assert s.pool.available == 0 and s.trie.reclaimable() == 8
+    # a non-matching request needs 4 fresh pages: dead chains must go
+    s.submit(Request(rid=99, tokens=[1, 2, 3, 4, 5, 6, 7, 8],
+                     max_new_tokens=8))
+    i = s.try_admit()
+    assert i is not None, "full-of-dead-prefixes pool refused admission"
+    assert s.trie_evictions >= 4
+    s.pool.check_invariants()
+    s.trie.check_invariants()
+    s.finish(i)
+
+
+# ------------------------------------------------------ zipfian workload
+def test_zipfian_prompts_hit_only_true_prefixes():
+    """Zipf-distributed traffic over a small prompt population: the hit
+    rate is positive, and every page attached shared corresponds to a
+    true token-prefix of the admitted prompt."""
+    s = Scheduler(KVPool(n_pages=257, page_size=PS), max_lanes=4,
+                  prefill_chunk=8, max_seq=64, prefix_cache=True)
+    rng = np.random.default_rng(7)
+    population = [rng.integers(0, 1000, int(rng.integers(8, 25))).tolist()
+                  for _ in range(6)]
+    ranks = np.minimum(rng.zipf(1.5, size=60) - 1, len(population) - 1)
+    seen = set()
+    for rid, k in enumerate(ranks):
+        prompt = population[int(k)]
+        s.submit(Request(rid=rid, tokens=prompt, max_new_tokens=4))
+        i = s.try_admit()
+        assert i is not None
+        lane = s.lanes[i]
+        n_shared = len(lane.shared_idx)
+        if int(k) not in seen:
+            assert n_shared == 0, "hit on a never-seen prompt"
+        seen.add(int(k))
+        # every attached page's trie tokens must prefix the prompt
+        path = s.trie.match(prompt)
+        got = [t for n in path[:n_shared] for t in n.tokens]
+        assert got == prompt[:len(got)]
+        s.register_prefix(lane)
+        s.finish(i)
+        s.pool.check_invariants()
+        s.trie.check_invariants()
+    assert s.page_hit_rate > 0.0
+    assert s.prefix_hits > 0 and s.prefix_lookups > s.prefix_hits

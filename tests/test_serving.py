@@ -80,9 +80,9 @@ def test_pool_random_trace_no_leak_no_double_free(trace, n_pages):
 
 # -------------------------------------------------------------- scheduler
 def _sched(n_pages=32, page_size=4, max_lanes=3, prefill_chunk=8,
-           max_seq=64):
+           max_seq=64, **kw):
     return Scheduler(KVPool(n_pages, page_size), max_lanes=max_lanes,
-                     prefill_chunk=prefill_chunk, max_seq=max_seq)
+                     prefill_chunk=prefill_chunk, max_seq=max_seq, **kw)
 
 
 def test_scheduler_rejects_oversized_request():
@@ -147,6 +147,117 @@ def test_scheduler_random_admit_finish_trace(reqs):
     s.pool.check_invariants()
 
 
+# ----------------------------------------------- priorities / preemption
+def test_scheduler_priority_admission_order():
+    """Higher classes admit first; FIFO within a class."""
+    s = _sched(n_pages=64, max_lanes=1, max_seq=64, priorities=3)
+    for rid, prio in [(0, 0), (1, 2), (2, 1), (3, 2), (4, 0)]:
+        s.submit(Request(rid=rid, tokens=[1] * 4, max_new_tokens=4,
+                         priority=prio))
+    order = []
+    while s.queue:
+        i = s.try_admit()
+        order.append(s.lanes[i].req.rid)
+        s.finish(i)
+    assert order == [1, 3, 2, 0, 4]
+
+
+def test_scheduler_rejects_out_of_range_priority():
+    s = _sched()   # priorities=1 by default
+    with pytest.raises(ValueError, match="priority"):
+        s.submit(Request(rid=0, tokens=[1] * 4, max_new_tokens=4,
+                         priority=1))
+    with pytest.raises(ValueError, match="priority"):
+        Request(rid=1, tokens=[1] * 4, max_new_tokens=4, priority=-1)
+
+
+def test_scheduler_preempts_lowest_priority_decoding_lane():
+    """A starved higher-priority head evicts the lowest-priority
+    decoding lane; the victim requeues at the front of its class with
+    its pages released."""
+    from repro.serving.scheduler import DECODE
+    s = Scheduler(KVPool(n_pages=9, page_size=4), max_lanes=2,
+                  prefill_chunk=8, max_seq=32, priorities=3, preempt=True)
+    s.submit(Request(rid=0, tokens=[1] * 8, max_new_tokens=8))  # 4 pages
+    s.submit(Request(rid=1, tokens=[2] * 8, max_new_tokens=8))  # 4 pages
+    a, b = s.try_admit(), s.try_admit()
+    s.lanes[a].state = s.lanes[b].state = DECODE
+    s.submit(Request(rid=2, tokens=[3] * 8, max_new_tokens=8, priority=2))
+    s.submit(Request(rid=3, tokens=[4] * 4, max_new_tokens=4))  # class 0
+    i = s.try_admit()
+    assert i is not None and s.lanes[i].req.rid == 2
+    assert s.preemptions == 1
+    # the youngest lane of the lowest class (rid 1) was the victim, and
+    # it requeued AHEAD of the later class-0 submission (rid 3)
+    assert s.lanes[a].req.rid == 0
+    assert [r.rid for r in s.queue] == [1, 3]
+    s.pool.check_invariants()
+    # equal priority never evicts: rid 1 (class 0) cannot preempt rid 0
+    assert s.try_admit() is None and s.preemptions == 1
+
+
+def test_scheduler_fuzz_priorities_preempt_no_leaks():
+    """Seeded random submit/admit/preempt/finish traces across mixed
+    priorities: the admitted request is always the (priority desc,
+    submit order) head, pool invariants hold after every transition,
+    and a full drain leaves zero pages outside the trie."""
+    from repro.serving.scheduler import DECODE, PREFILL
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        s = Scheduler(KVPool(n_pages=int(rng.integers(12, 40)), page_size=4),
+                      max_lanes=int(rng.integers(2, 5)), prefill_chunk=8,
+                      max_seq=48, prefix_cache=bool(seed % 2),
+                      priorities=3, preempt=True)
+        rid = 0
+        for _ in range(120):
+            op = rng.integers(0, 4)
+            if op == 0 and rid < 40:
+                plen = int(rng.integers(1, 17))
+                s.submit(Request(rid=rid,
+                                 tokens=rng.integers(0, 50, plen).tolist(),
+                                 max_new_tokens=int(rng.integers(1, 9)),
+                                 priority=int(rng.integers(0, 3))))
+                rid += 1
+            elif op == 1 and s.queue:
+                head = s.queue[0]
+                assert all(s._key(head) <= s._key(q) for q in s.queue), \
+                    "queue lost (priority, FIFO) order"
+                i = s.try_admit()
+                if i is not None:
+                    assert s.lanes[i].req.rid == head.rid
+            elif op == 2:
+                pre = s.prefilling()
+                if pre:
+                    lane = s.lanes[int(rng.choice(pre))]
+                    lane.state = DECODE          # fake prefill completion
+                    s.register_prefix(lane)
+            elif op == 3:
+                dec = s.decoding()
+                if dec:
+                    s.finish(int(rng.choice(dec)))
+            s.pool.check_invariants()
+            if s.trie is not None:
+                s.trie.check_invariants()
+        # drain: finish everything admitted, admit the stragglers
+        stall = 0
+        while s.busy and stall < 200:
+            stall += 1
+            if s.try_admit() is not None:
+                stall = 0
+            for i in list(s.prefilling()) + list(s.decoding()):
+                s.finish(i)
+                stall = 0
+            s.pool.check_invariants()
+        assert not s.busy, "drain stalled (blocked head or stuck lane)"
+        trie_pages = s.trie.reclaimable() if s.trie is not None else 0
+        assert s.pool.in_use == trie_pages, "pages leaked outside the trie"
+        if s.trie is not None:
+            s.trie.evict(trie_pages)
+            s.trie.check_invariants()
+        assert s.pool.in_use == 0
+        s.pool.check_invariants()
+
+
 # ------------------------------------------------------- spec validation
 def test_serving_spec_validation_errors():
     base = api.preset("tiny-smoke")
@@ -161,6 +272,9 @@ def test_serving_spec_validation_errors():
             ("serving.temperature", -0.5, "greedy"),
             ("serving.top_k", -1, "top_k"),
             ("serving.eos_id", 10 ** 9, "vocab"),
+            ("serving.priorities", 0, "priorities"),
+            # preemption is meaningless with a single priority class
+            ("serving.preempt", True, "preempt"),
             # pool that can never cover even the smallest request
             ("serving.n_pages", 2, "usable pages")]:
         with pytest.raises(api.SpecError, match=path.split(".")[1]):
@@ -356,6 +470,72 @@ def test_engine_reusable_without_result_accumulation(opt_smoke):
     second = eng.run([mk(2)])
     assert [r.rid for r in second] == [2]
     assert eng.pool.in_use == 0
+
+
+def test_engine_prefix_sharing_bit_identical(opt_smoke):
+    """The sharing acceptance anchor: greedy output with
+    ``prefix_cache=True`` is bit-identical to the sharing-off path on a
+    shared-system-prompt convoy, pages actually share (hit rate > 0,
+    COW fires), and a drained engine holds pages only through the
+    trie."""
+    cfg, params = opt_smoke
+    rng = np.random.default_rng(11)
+    system = rng.integers(0, cfg.vocab, 12).tolist()   # 3 full pages
+    tails = [rng.integers(0, cfg.vocab,
+                          int(rng.integers(1, 9))).tolist()
+             for _ in range(4)]
+    mk = lambda: [Request(rid=i, tokens=system + tails[i],
+                          max_new_tokens=4, seed=i)
+                  for i in range(4)]
+    off = {r.rid: r.tokens for r in _engine(cfg, params).run(mk())}
+    eng = _engine(cfg, params, prefix_cache=True)
+    on = {r.rid: r.tokens for r in eng.run(mk())}
+    assert on == off
+    assert eng.sched.page_hit_rate > 0.0
+    assert eng.sched.cow_copies > 0
+    # a second convoy over the warm trie hits at least as often
+    hits0 = eng.sched.prefix_hits
+    assert {r.rid: r.tokens for r in eng.run(mk())} == off
+    assert eng.sched.prefix_hits > hits0
+    # drain accounting: every live page is a trie reference, and
+    # evicting the (now dead) trie returns the pool to empty
+    assert eng.pool.in_use == eng.sched.trie.reclaimable()
+    eng.sched.trie.evict(eng.pool.in_use)
+    assert eng.pool.in_use == 0
+    eng.pool.check_invariants()
+    eng.sched.trie.check_invariants()
+
+
+def test_engine_preempt_resume_bit_identical(opt_smoke):
+    """A decoding low-priority request evicted by a high-priority
+    arrival must finish with exactly the tokens of an uncontended run —
+    preemption discards progress, never corrupts it."""
+    cfg, params = opt_smoke
+    rng = np.random.default_rng(12)
+    lo_prompt = rng.integers(0, cfg.vocab, 6).tolist()
+    hi_prompt = rng.integers(0, cfg.vocab, 6).tolist()
+    kw = dict(max_lanes=1, n_pages=8, priorities=2, preempt=True,
+              prefix_cache=True, max_seq=32)
+    mk_lo = lambda: Request(rid=0, tokens=lo_prompt, max_new_tokens=6)
+    mk_hi = lambda: Request(rid=1, tokens=hi_prompt, max_new_tokens=3,
+                            priority=1)
+    solo_lo = _engine(cfg, params, **kw).run([mk_lo()])[0].tokens
+    solo_hi = _engine(cfg, params, **kw).run([mk_hi()])[0].tokens
+    eng = _engine(cfg, params, **kw)
+    eng.submit(mk_lo())
+    steps = 0
+    while not (eng.sched.decoding()
+               and eng.sched.lanes[eng.sched.decoding()[0]].out):
+        eng.step()
+        steps += 1
+        assert steps < 50
+    eng.submit(mk_hi())                    # outranks the decoding lane
+    got = {r.rid: r.tokens for r in eng.run([])}
+    assert eng.sched.preemptions == 1
+    assert got[1] == solo_hi               # high priority ran through
+    assert got[0] == solo_lo               # victim regenerated identically
+    assert eng.pool.in_use == eng.sched.trie.reclaimable()
+    eng.pool.check_invariants()
 
 
 def test_docgen_handles_bare_target_dir(tmp_path, capsys):
